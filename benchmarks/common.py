@@ -1,0 +1,44 @@
+"""Shared helpers for the per-figure/table benchmarks."""
+from __future__ import annotations
+
+from repro.launch.serve import run_once
+
+# The paper's four search benchmarks, as synthetic-world profiles: the
+# skew/locality and the no-cache EM baseline differ per dataset (Fig 7/13;
+# EM baselines follow published Search-R1-7B numbers).
+DATASETS = {
+    "zilliz": dict(zipf_s=1.10, em_p_base=0.80, seed=11),
+    "hotpotqa": dict(zipf_s=0.99, em_p_base=0.62, seed=12),
+    "musique": dict(zipf_s=0.99, em_p_base=0.35, seed=13),
+    "2wiki": dict(zipf_s=0.99, em_p_base=0.52, seed=14),
+    "strategyqa": dict(zipf_s=0.99, em_p_base=0.79, seed=15),
+}
+
+
+def emit(name: str, us_per_call: float, **derived):
+    kv = " ".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{us_per_call:.1f},{kv}")
+
+
+def run_ds(dataset: str, mode: str, **kw):
+    prof = DATASETS[dataset]
+    import repro.serving.engine as eng_mod
+
+    base = dict(
+        workload="zipf", mode=mode, n_requests=500, n_intents=800,
+        concurrency=8, seed=prof["seed"],
+    )
+    base.update(kw)
+    s = run_once(**base)
+    return s
+
+
+def fmt(s: dict) -> dict:
+    return dict(
+        thpt=round(s["throughput_rps"], 3),
+        hit=round(s.get("hit_rate", 0.0), 3),
+        lat_ms=round(s["latency_mean"] * 1e3, 1),
+        p99_ms=round(s["latency_p99"] * 1e3, 1),
+        api=s["api_calls"],
+        em=round(s["em"], 3),
+    )

@@ -1,0 +1,193 @@
+"""One benchmark function per paper table/figure (§6). Each prints CSV
+rows ``name,us_per_call,derived-metrics``; benchmarks.run drives them."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import DATASETS, emit, fmt, run_ds
+from repro.launch.serve import run_once
+
+RATIOS = (0.1, 0.2, 0.4, 0.6)
+
+
+def fig7_skewed():
+    """Throughput/hit/latency vs cache ratio on 4 skewed search datasets."""
+    for ds in ("zilliz", "hotpotqa", "musique", "2wiki"):
+        prof = DATASETS[ds]
+        v = run_ds(ds, "vanilla", em_p_base=prof["em_p_base"],
+                   zipf_s=prof["zipf_s"])
+        emit(f"fig7/{ds}/vanilla", v["latency_mean"] * 1e6, **fmt(v))
+        for ratio in RATIOS:
+            for mode in ("exact", "cortex"):
+                s = run_ds(ds, mode, cache_ratio=ratio,
+                           em_p_base=prof["em_p_base"], zipf_s=prof["zipf_s"])
+                emit(f"fig7/{ds}/{mode}@{ratio}", s["latency_mean"] * 1e6,
+                     **fmt(s))
+
+
+def fig8_trend():
+    """Bursty trend-driven workload vs cache ratio (LCFU absorbs waves)."""
+    v = run_once(workload="trend", mode="vanilla", n_requests=600,
+                 concurrency=8, seed=21)
+    emit("fig8/vanilla", v["latency_mean"] * 1e6, **fmt(v))
+    for ratio in RATIOS:
+        for mode in ("exact", "cortex"):
+            s = run_once(workload="trend", mode=mode, n_requests=600,
+                         cache_ratio=ratio, concurrency=8, max_ttl=900.0,
+                         seed=21)
+            emit(f"fig8/{mode}@{ratio}", s["latency_mean"] * 1e6, **fmt(s))
+
+
+def fig9_swebench():
+    """Code-agent workload (SWE-bench file-access pattern)."""
+    v = run_once(workload="swe", mode="vanilla", n_requests=500,
+                 concurrency=8, seed=22)
+    emit("fig9/vanilla", v["latency_mean"] * 1e6, **fmt(v))
+    for ratio in RATIOS:
+        for mode in ("exact", "cortex"):
+            s = run_once(workload="swe", mode=mode, n_requests=500,
+                         cache_ratio=ratio, concurrency=8, seed=22)
+            emit(f"fig9/{mode}@{ratio}", s["latency_mean"] * 1e6, **fmt(s))
+
+
+def fig10_concurrency():
+    """Throughput scaling vs request concurrency (musique, ratio 0.4)."""
+    prof = DATASETS["musique"]
+    for conc in (1, 2, 4, 8, 16, 32):
+        for mode in ("vanilla", "exact", "cortex"):
+            s = run_ds("musique", mode, cache_ratio=0.4, concurrency=conc,
+                       em_p_base=prof["em_p_base"])
+            emit(f"fig10/{mode}@c{conc}", s["latency_mean"] * 1e6, **fmt(s))
+
+
+def fig11_breakdown():
+    """Per-request latency breakdown at low concurrency (steady state:
+    30% warmup excluded; the cortex row also reports the pure hit path)."""
+    for mode in ("vanilla", "cortex"):
+        s = run_ds("musique", mode, cache_ratio=0.6, concurrency=1,
+                   n_requests=400, warmup_frac=0.3)
+        emit(
+            f"fig11/{mode}", s["latency_mean"] * 1e6,
+            agent_s=round(s["agent_time_mean"], 3),
+            cache_s=round(s["cache_time_mean"], 3),
+            remote_s=round(s["remote_time_mean"], 3),
+            total_s=round(s["latency_mean"], 3),
+            hitpath_s=round(s.get("hitpath_latency", float("nan")), 3),
+        )
+
+
+def fig12_ratelimit():
+    """External call counts + retry ratios under the 100 QPM cap."""
+    for mode in ("vanilla", "cortex"):
+        s = run_ds("musique", mode, cache_ratio=0.4, concurrency=8,
+                   warmup_frac=0.3)
+        emit(
+            f"fig12/{mode}", s["latency_mean"] * 1e6,
+            api_calls=s["api_calls"], attempts=s["api_attempts"],
+            retry_ratio=round(s["retry_ratio"], 4),
+        )
+
+
+def table4_ratelimit_ablation():
+    """Normalized throughput with vs without the API rate limit."""
+    rows = {}
+    for qpm, tag in ((100.0, "limited"), (None, "unlimited")):
+        for mode in ("vanilla", "cortex"):
+            s = run_ds("musique", mode, cache_ratio=0.4, concurrency=4,
+                       qpm=qpm, warmup_frac=0.3)
+            rows[(tag, mode)] = s["throughput_rps"]
+    for tag in ("unlimited", "limited"):
+        ratio = rows[(tag, "cortex")] / rows[(tag, "vanilla")]
+        emit(f"table4/{tag}", 0.0,
+             vanilla=round(rows[(tag, 'vanilla')], 3),
+             cortex=round(rows[(tag, 'cortex')], 3),
+             cortex_over_vanilla=round(ratio, 2))
+
+
+def table5_cost():
+    """Cost analysis: vanilla, Cortex w/o sharing (2 chips), Cortex."""
+    confs = [
+        ("vanilla", dict(mode="vanilla")),
+        ("cortex_dedicated", dict(mode="cortex", colocated=False)),
+        ("cortex", dict(mode="cortex", colocated=True)),
+    ]
+    # paper §6.5 runs this controlled comparison against the self-deployed
+    # RAG service (no public-API rate cap) — otherwise the faster front-end
+    # merely floods the throttle queue
+    for name, kw in confs:
+        s = run_ds("musique", cache_ratio=0.6, concurrency=16,
+                   n_requests=600, qpm=None, warmup_frac=0.2, **kw)
+        emit(
+            f"table5/{name}", s["latency_mean"] * 1e6,
+            api_cost=round(s["api_cost"], 3),
+            gpu_cost=round(s["gpu_cost"], 4),
+            total=round(s["cost_total"], 3),
+            thpt=round(s["throughput_rps"], 3),
+            thpt_per_dollar=round(s["thpt_per_dollar"], 3),
+        )
+
+
+def fig13_accuracy():
+    """EM accuracy: vanilla vs Cortex vs Cortex-w/o-judge per dataset."""
+    for ds in ("hotpotqa", "musique", "2wiki", "strategyqa"):
+        prof = DATASETS[ds]
+        row = {}
+        for mode in ("vanilla", "cortex", "cortex-nojudge"):
+            s = run_ds(ds, mode, cache_ratio=0.6,
+                       em_p_base=prof["em_p_base"], concurrency=8)
+            row[mode] = s
+        emit(
+            f"fig13/{ds}", 0.0,
+            vanilla_em=round(row["vanilla"]["em"], 3),
+            cortex_em=round(row["cortex"]["em"], 3),
+            nojudge_em=round(row["cortex-nojudge"]["em"], 3),
+            cortex_info_acc=round(row["cortex"]["info_accuracy"], 3),
+            nojudge_info_acc=round(
+                row["cortex-nojudge"]["info_accuracy"], 3
+            ),
+        )
+
+
+def table6_lcfu():
+    """LCFU vs LRU vs LFU on the HotpotQA-profile skewed workload (the
+    paper's Table 6 setting): heterogeneous tool costs mean LCFU trades a
+    little hit rate for keeping expensive-to-refetch items — lower mean
+    miss cost, higher end-to-end throughput."""
+    prof = DATASETS["hotpotqa"]
+    for ev in ("lru", "lfu", "lcfu"):
+        s = run_ds("hotpotqa", "cortex", cache_ratio=0.2, eviction=ev,
+                   n_requests=900, warmup_frac=0.25, concurrency=4,
+                   qpm=200.0, em_p_base=prof["em_p_base"])
+        emit(f"table6/{ev}", s["latency_mean"] * 1e6,
+             hit=round(s["hit_rate"], 3),
+             thpt=round(s["throughput_rps"], 3),
+             lat_ms=round(s["latency_mean"] * 1e3, 1),
+             cost_per_call=round(
+                 s["api_cost"] / max(s["api_calls"], 1) * 1e3, 2
+             ),
+             evictions=s["evictions"])
+
+
+def table7_colocation():
+    """Co-located (MPS-style 80/20) vs dedicated judge chip."""
+    for name, co in (("dedicated_2chip", False), ("colocated_80_20", True)):
+        s = run_ds("musique", "cortex", cache_ratio=0.6, concurrency=16,
+                   colocated=co, qpm=None, warmup_frac=0.2)
+        emit(f"table7/{name}", s["latency_mean"] * 1e6,
+             thpt=round(s["throughput_rps"], 3),
+             p99_ms=round(s["latency_p99"] * 1e3, 1),
+             chips=1 if co else 2,
+             thpt_per_dollar=round(s["thpt_per_dollar"], 3))
+
+
+def recalibration_overhead():
+    """§6.6: periodic threshold recalibration cost + drift adaptation."""
+    base = run_ds("hotpotqa", "cortex", cache_ratio=0.5, concurrency=8)
+    recal = run_ds("hotpotqa", "cortex", cache_ratio=0.5, concurrency=8,
+                   recalibrate_every=30.0)
+    drop = 1 - recal["throughput_rps"] / base["throughput_rps"]
+    emit("recal/overhead", 0.0,
+         base_thpt=round(base["throughput_rps"], 3),
+         recal_thpt=round(recal["throughput_rps"], 3),
+         thpt_drop=round(drop, 4),
+         em_base=round(base["em"], 3), em_recal=round(recal["em"], 3))

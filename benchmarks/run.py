@@ -1,0 +1,50 @@
+"""Benchmark harness — one function per paper table/figure (DESIGN.md §7).
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig7,table5]
+"""
+import argparse
+import sys
+import time
+
+from benchmarks import figures, kernels_bench
+
+ALL = {
+    "fig7": figures.fig7_skewed,
+    "fig8": figures.fig8_trend,
+    "fig9": figures.fig9_swebench,
+    "fig10": figures.fig10_concurrency,
+    "fig11": figures.fig11_breakdown,
+    "fig12": figures.fig12_ratelimit,
+    "table4": figures.table4_ratelimit_ablation,
+    "table5": figures.table5_cost,
+    "fig13": figures.fig13_accuracy,
+    "table6": figures.table6_lcfu,
+    "table7": figures.table7_colocation,
+    "recal": figures.recalibration_overhead,
+    "kernel_ann": kernels_bench.kernel_ann,
+    "kernel_flash": kernels_bench.kernel_flash,
+    "cache_path": kernels_bench.cache_path_calibration,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(ALL))
+    args = ap.parse_args()
+    names = list(ALL) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for n in names:
+        if n not in ALL:
+            print(f"unknown benchmark {n!r}", file=sys.stderr)
+            sys.exit(2)
+        t = time.time()
+        ALL[n]()
+        print(f"# {n} done in {time.time()-t:.1f}s", file=sys.stderr)
+    print(f"# all benchmarks done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,47 @@
+"""Real co-located serving: a reduced agent LM decodes batched requests
+through the continuous-batching runtime while the (real, tiny) semantic
+judge cross-encoder executes between decode ticks under the paper's
+priority rule — the concrete JAX realization of Cortex §4.4 (no
+simulation; actual jit-compiled models on this host).
+
+Run:  PYTHONPATH=src python examples/colocated_serving.py
+"""
+import time
+
+import numpy as np
+
+from repro.configs import get_config, shrink
+from repro.core.judge import ModelJudge
+from repro.serving.generator import ContinuousBatcher, GenRequest
+
+agent_cfg = shrink(get_config("search-r1-7b"), d_model=128, vocab=512,
+                   n_repeat=2)
+judge = ModelJudge()
+pairs = ([f"query {i}" for i in range(4)], [f"cached {i}" for i in range(4)])
+judge_scores = []
+
+
+def judge_batch():
+    judge_scores.append(judge.score_pairs(*pairs).mean())
+
+
+cb = ContinuousBatcher(agent_cfg, slots=4, max_len=96, judge=judge_batch)
+rng = np.random.default_rng(0)
+reqs = [
+    GenRequest(i, rng.integers(1, 512, size=int(rng.integers(4, 12))),
+               max_new=8)
+    for i in range(10)
+]
+for r in reqs:
+    cb.submit(r)
+
+t0 = time.perf_counter()
+ticks = cb.run()
+dt = time.perf_counter() - t0
+done = sum(r.done for r in reqs)
+print(f"served {done}/{len(reqs)} requests in {ticks} ticks "
+      f"({cb.decode_steps} batched decode steps) in {dt:.2f}s")
+print(f"judge batches interleaved (priority rule): {cb.judge_batches_run}")
+print(f"sample generation (req 0): {reqs[0].out_tokens}")
+assert done == len(reqs) and cb.judge_batches_run > 0
+print("CO-LOCATED SERVING OK")

@@ -1,0 +1,17 @@
+"""Lower+compile one (arch × shape) cell on the 512-chip multi-pod
+production mesh and print its memory/cost/roofline analysis.
+
+Run:  PYTHONPATH=src python examples/multi_pod_dryrun.py [arch] [shape]
+"""
+import subprocess
+import sys
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "granite-3-8b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+
+# dryrun must own process start (XLA_FLAGS before jax import)
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.dryrun",
+     "--arch", arch, "--shape", shape, "--multi-pod"],
+    check=True,
+)

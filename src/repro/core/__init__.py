@@ -1,0 +1,18 @@
+"""Cortex core: Semantic Elements, Seri two-stage retrieval, the semantic
+cache (LCFU + TTL), Markov prefetching and threshold recalibration."""
+from repro.core.cache import CacheStats, CortexCache, make_cache
+from repro.core.prefetch import MarkovPrefetcher, Prediction
+from repro.core.recalibrate import (
+    EvalRecord, Recalibration, find_threshold, precision_curve, recalibrate,
+)
+from repro.core.semantic_element import SemanticElement, ttl_from_staticity
+from repro.core.seri import Seri, SeriResult, VectorIndex
+
+__all__ = [
+    "CacheStats", "CortexCache", "make_cache",
+    "MarkovPrefetcher", "Prediction",
+    "EvalRecord", "Recalibration", "find_threshold", "precision_curve",
+    "recalibrate",
+    "SemanticElement", "ttl_from_staticity",
+    "Seri", "SeriResult", "VectorIndex",
+]

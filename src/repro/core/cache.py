@@ -1,0 +1,248 @@
+"""CortexCache — the cache abstraction layered on Seri (paper §4.3).
+
+Turns probabilistic similarity into deterministic cache semantics:
+
+* semantic-aware HIT — only after the full two-stage pipeline validates a
+  candidate; a hit increments the SE's frequency.
+* admission — every remote fetch result is inserted as a new SE with
+  judge-estimated staticity → TTL; prefetched items enter with freq=0.
+* LCFU eviction (Algorithm 2) — TTL purge first, then evict lowest
+  value-score until under capacity.
+* capacity is byte-based (cache_ratio × workload footprint in the
+  benchmarks, matching the paper's "cache size ratio" axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core.semantic_element import SemanticElement, ttl_from_staticity
+from repro.core.seri import Seri, SeriResult, VectorIndex
+
+
+@dataclasses.dataclass
+class CacheStats:
+    lookups: int = 0
+    hits: int = 0
+    misses: int = 0
+    insertions: int = 0
+    evictions: int = 0
+    ttl_evictions: int = 0
+    judge_calls: int = 0
+    prefetch_inserts: int = 0
+    prefetch_hits: int = 0
+    bytes_stored: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+class CortexCache:
+    def __init__(
+        self,
+        seri: Seri,
+        *,
+        capacity_bytes: int,
+        max_ttl: float = 3600.0,
+        min_ttl: float = 30.0,
+        eviction: str = "lcfu",  # lcfu | lru | lfu (paper Table 6 ablation)
+    ):
+        self.seri = seri
+        self.capacity_bytes = capacity_bytes
+        self.max_ttl = max_ttl
+        self.min_ttl = min_ttl
+        self.eviction = eviction
+        self.store: dict[int, SemanticElement] = {}
+        self.rows: dict[int, int] = {}  # se_id -> index row
+        self.usage = 0
+        self.stats = CacheStats()
+        self._next_id = 0
+
+    # ------------------------------------------------------------ lookup
+
+    def lookup(self, query: str, q_emb: np.ndarray, now: float) -> SeriResult:
+        self.stats.lookups += 1
+        res = self.seri.retrieve(query, q_emb, self.store, now)
+        self.stats.judge_calls += res.judge_calls
+        if res.hit:
+            se = res.se
+            se.freq += 1
+            se.last_access = now
+            self.stats.hits += 1
+            if se.prefetched and se.freq == 1:
+                self.stats.prefetch_hits += 1
+        else:
+            self.stats.misses += 1
+        return res
+
+    # ---------------------------------------------------- staged lookup
+    # The serving engine needs the two Seri stages split so the judge can
+    # run as an async (deferrable) accelerator job (paper §4.4): stage1 =
+    # ANN candidates; finalize = apply judge scores -> deterministic hit.
+
+    def stage1(self, query: str, q_emb: np.ndarray, now: float):
+        self.stats.lookups += 1
+        se_ids, sims = self.seri.index.search(
+            q_emb, self.seri.top_k, self.seri.tau_sim
+        )
+        cands = [
+            self.store[i] for i in se_ids
+            if i in self.store and not self.store[i].expired(now)
+        ]
+        return cands
+
+    def finalize(self, query: str, cands, scores, now: float) -> SeriResult:
+        self.stats.judge_calls += len(cands)
+        order = np.argsort(-np.asarray(scores))
+        best = float(scores[order[0]]) if len(cands) else 0.0
+        for j in order:
+            if scores[j] >= self.seri.tau_lsm:
+                se = cands[j]
+                if se.se_id not in self.store:  # evicted meanwhile
+                    continue
+                se.freq += 1
+                se.last_access = now
+                self.stats.hits += 1
+                if se.prefetched and se.freq == 1:
+                    self.stats.prefetch_hits += 1
+                return SeriResult(True, se, len(cands), len(cands), best,
+                                  np.zeros(0, np.float32))
+        self.stats.misses += 1
+        return SeriResult(False, None, len(cands), len(cands), best,
+                          np.zeros(0, np.float32))
+
+    def miss_no_candidates(self) -> None:
+        self.stats.misses += 1
+
+    # ------------------------------------------------------------ admit
+
+    def insert(
+        self,
+        query: str,
+        q_emb: np.ndarray,
+        value: Any,
+        *,
+        now: float,
+        cost: float,
+        latency: float,
+        size: int,
+        staticity: Optional[int] = None,
+        prefetched: bool = False,
+        intent: Optional[int] = None,
+    ) -> SemanticElement:
+        staticity = staticity or self.seri.judge.staticity(query)
+        ttl = ttl_from_staticity(staticity, self.max_ttl, self.min_ttl)
+        se = SemanticElement(
+            se_id=self._next_id,
+            key=query,
+            value=value,
+            embedding=q_emb,
+            staticity=staticity,
+            cost=cost,
+            latency=latency,
+            size=size,
+            created_at=now,
+            expires_at=now + ttl,
+            # the triggering miss counts as an access; only speculative
+            # prefetches enter cold (paper §4.3: "prefetched items enter
+            # with zero frequency")
+            freq=0 if prefetched else 1,
+            last_access=now,
+            prefetched=prefetched,
+            intent=intent,
+        )
+        self._next_id += 1
+        self._make_room(size, now)
+        if self.seri.index.full:
+            self._evict_n(1, now)
+        row = self.seri.index.add(se.se_id, q_emb)
+        self.store[se.se_id] = se
+        self.rows[se.se_id] = row
+        self.usage += size
+        self.stats.insertions += 1
+        if prefetched:
+            self.stats.prefetch_inserts += 1
+        self.stats.bytes_stored = self.usage
+        return se
+
+    def contains_semantic(self, query: str, q_emb: np.ndarray,
+                          now: float) -> bool:
+        """Peek (no stats, no freq bump) — used by the prefetcher."""
+        se_ids, _ = self.seri.index.search(
+            q_emb, self.seri.top_k, self.seri.tau_sim
+        )
+        return any(
+            i in self.store and not self.store[i].expired(now) for i in se_ids
+        )
+
+    # ------------------------------------------------------------ evict
+
+    def _remove(self, se_id: int, *, ttl: bool) -> None:
+        se = self.store.pop(se_id)
+        row = self.rows.pop(se_id)
+        self.seri.index.remove(row)
+        self.usage -= se.size
+        if ttl:
+            self.stats.ttl_evictions += 1
+        else:
+            self.stats.evictions += 1
+        self.stats.bytes_stored = self.usage
+
+    def purge_expired(self, now: float) -> int:
+        dead = [i for i, se in self.store.items() if se.expired(now)]
+        for i in dead:
+            self._remove(i, ttl=True)
+        return len(dead)
+
+    def _victim_order(self, now: float):
+        if self.eviction == "lru":
+            key = lambda se: se.last_access
+        elif self.eviction == "lfu":
+            key = lambda se: (se.freq, se.last_access)
+        else:  # lcfu (Algorithm 2)
+            key = lambda se: se.lcfu_score(now)
+        return sorted(self.store.values(), key=key)
+
+    def _make_room(self, incoming: int, now: float) -> None:
+        if self.usage + incoming <= self.capacity_bytes:
+            return
+        self.purge_expired(now)  # TTL purge first (Algorithm 2 line 6)
+        if self.usage + incoming <= self.capacity_bytes:
+            return
+        for se in self._victim_order(now):
+            if self.usage + incoming <= self.capacity_bytes:
+                break
+            self._remove(se.se_id, ttl=False)
+
+    def _evict_n(self, n: int, now: float) -> None:
+        for se in self._victim_order(now)[:n]:
+            self._remove(se.se_id, ttl=False)
+
+    # ------------------------------------------------------------ misc
+
+    def __len__(self) -> int:
+        return len(self.store)
+
+
+def make_cache(
+    *,
+    capacity_bytes: int,
+    dim: int,
+    judge,
+    index_capacity: int = 8192,
+    tau_sim: float = 0.9,
+    tau_lsm: float = 0.9,
+    top_k: int = 4,
+    eviction: str = "lcfu",
+    max_ttl: float = 3600.0,
+    backend: str = "numpy",
+) -> CortexCache:
+    index = VectorIndex(index_capacity, dim, backend=backend)
+    seri = Seri(index, judge, tau_sim=tau_sim, tau_lsm=tau_lsm, top_k=top_k)
+    return CortexCache(
+        seri, capacity_bytes=capacity_bytes, max_ttl=max_ttl,
+        eviction=eviction,
+    )

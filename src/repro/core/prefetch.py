@@ -1,0 +1,53 @@
+"""Predictive prefetching — first-order Markov over confirmed hits (§4.3).
+
+The model learns P(q_{i+1} | q_i) from the stream of *validated* queries
+(intent-level transitions, so paraphrases of one topic share a state).
+When the top transition probability exceeds the confidence threshold and
+the predicted item is absent, the engine issues an async fetch; the new SE
+enters with freq = 0, making unused speculation the first eviction victim
+(self-correcting pollution control).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter, defaultdict
+from typing import Hashable, Optional
+
+
+@dataclasses.dataclass
+class Prediction:
+    state: Hashable
+    prob: float
+    support: int
+
+
+class MarkovPrefetcher:
+    def __init__(self, *, confidence: float = 0.5, min_support: int = 3,
+                 max_states: int = 100_000):
+        self.confidence = confidence
+        self.min_support = min_support
+        self.max_states = max_states
+        self.trans: dict[Hashable, Counter] = defaultdict(Counter)
+        self.totals: Counter = Counter()
+        self._prev: Optional[Hashable] = None
+
+    def observe(self, state: Hashable) -> None:
+        """Feed one validated (hit-or-fetched) query state."""
+        if self._prev is not None and self._prev != state:
+            if len(self.trans) < self.max_states or self._prev in self.trans:
+                self.trans[self._prev][state] += 1
+                self.totals[self._prev] += 1
+        self._prev = state
+
+    def reset_session(self) -> None:
+        self._prev = None
+
+    def predict(self, state: Hashable) -> Optional[Prediction]:
+        total = self.totals.get(state, 0)
+        if total < self.min_support:
+            return None
+        nxt, cnt = self.trans[state].most_common(1)[0]
+        p = cnt / total
+        if p >= self.confidence:
+            return Prediction(nxt, p, cnt)
+        return None

@@ -1,0 +1,65 @@
+"""Semantic Element (SE) — Cortex's core caching unit (paper §4.1, Fig 5).
+
+An SE encapsulates one discrete agent↔tool interaction: the agent's query
+(semantic key), the retrieved knowledge (value), the embedding fingerprint,
+and the performance-aware metadata driving eviction/TTL decisions:
+
+  * staticity  1–10  — expected validity duration class (judge-estimated):
+                       10 = stable fact, 5 = moderate, 1 = ephemeral.
+  * cost ($), latency (s) — what the remote fetch cost; retained items
+                       with high fetch cost are worth more per byte.
+  * freq       — confirmed semantic-hit count (only validated hits count).
+  * size       — bytes of the cached value.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SemanticElement:
+    se_id: int
+    key: str                       # the tool-call query (from <search>/<tool>)
+    value: Any                     # retrieved knowledge (from <info>)
+    embedding: np.ndarray          # unit-norm semantic fingerprint
+    staticity: int                 # 1..10
+    cost: float                    # $ per original remote fetch
+    latency: float                 # seconds of the original remote fetch
+    size: int                      # bytes
+    created_at: float
+    expires_at: float
+    freq: int = 0
+    last_access: float = 0.0
+    prefetched: bool = False       # entered via prefetch (freq starts at 0)
+    intent: Optional[int] = None   # synthetic-world ground-truth intent id
+
+    def expired(self, now: float) -> bool:
+        return now >= self.expires_at
+
+    def ttl_remaining(self, now: float) -> float:
+        return self.expires_at - now
+
+    def lcfu_score(self, now: float) -> float:
+        """Algorithm 2 CalScore: log-composite value per byte."""
+        if self.size == 0 or self.ttl_remaining(now) <= 0:
+            return 0.0
+        score = (
+            math.log(self.freq + 1.0)
+            * math.log(self.cost * 1e3 + 1.0)
+            * math.log(self.latency + 1.0)
+            * math.log(self.staticity + 1.0)
+        )
+        return score / self.size
+
+
+def ttl_from_staticity(staticity: int, max_ttl: float,
+                       min_ttl: float = 30.0) -> float:
+    """Map the 1–10 staticity class to a TTL. Exponential in the class so
+    ephemeral items (1–3) expire in minutes while stable facts (9–10) live
+    at the user-defined ceiling (paper §4.1/§4.3 aging mechanism)."""
+    frac = (max(1, min(10, staticity)) - 1) / 9.0
+    return min_ttl * (max_ttl / min_ttl) ** frac

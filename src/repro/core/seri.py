@@ -1,0 +1,126 @@
+"""Seri — the Semantic Retrieval Index (paper §4.2).
+
+Stage 1 (coarse): exact cosine top-k over the SE embedding matrix with the
+τ_sim gate. On TPU this runs as the Pallas ``ann_topk`` kernel (brute-force
+MXU matmul — the TPU-idiomatic replacement for Faiss graph traversal, see
+DESIGN.md §3); on CPU the numpy path is bit-identical.
+
+Stage 2 (fine): the semantic judge validates each candidate's *result*
+against the new query; the first candidate with S_lsm ≥ τ_lsm is a
+semantic-aware cache hit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.semantic_element import SemanticElement
+
+
+class VectorIndex:
+    """Fixed-capacity embedding store with free-list row management."""
+
+    def __init__(self, capacity: int, dim: int, backend: str = "numpy"):
+        self.capacity = capacity
+        self.dim = dim
+        self.backend = backend
+        self.emb = np.zeros((capacity, dim), np.float32)
+        self.active = np.zeros(capacity, bool)
+        self.row_se: list[Optional[int]] = [None] * capacity
+        self._free = list(range(capacity - 1, -1, -1))
+        self._kernel_fn = None
+        if backend == "kernel":
+            from repro.kernels.ops import ann_topk_jit
+
+            self._kernel_fn = ann_topk_jit
+
+    def __len__(self) -> int:
+        return int(self.active.sum())
+
+    @property
+    def full(self) -> bool:
+        return not self._free
+
+    def add(self, se_id: int, embedding: np.ndarray) -> int:
+        if not self._free:
+            raise RuntimeError("index full — evict first")
+        row = self._free.pop()
+        self.emb[row] = embedding
+        self.active[row] = True
+        self.row_se[row] = se_id
+        return row
+
+    def remove(self, row: int) -> None:
+        if not self.active[row]:
+            return
+        self.active[row] = False
+        self.row_se[row] = None
+        self.emb[row] = 0.0
+        self._free.append(row)
+
+    def search(self, q: np.ndarray, k: int, tau_sim: float):
+        """Top-k rows with cosine ≥ tau_sim. q: (dim,) unit-norm.
+        Returns (se_ids, sims) sorted by similarity desc."""
+        if len(self) == 0:
+            return [], np.zeros(0, np.float32)
+        if self._kernel_fn is not None:
+            sims, rows = self._kernel_fn(self.emb, self.active, q, k)
+            sims = np.asarray(sims)
+            rows = np.asarray(rows)
+        else:
+            scores = self.emb @ q
+            scores = np.where(self.active, scores, -1.0)
+            k_eff = min(k, len(scores))
+            rows = np.argpartition(-scores, k_eff - 1)[:k_eff]
+            rows = rows[np.argsort(-scores[rows])]
+            sims = scores[rows]
+        keep = sims >= tau_sim
+        rows, sims = rows[keep], sims[keep]
+        return [self.row_se[r] for r in rows], sims
+
+
+@dataclasses.dataclass
+class SeriResult:
+    hit: bool
+    se: Optional[SemanticElement]
+    n_candidates: int
+    judge_calls: int
+    best_score: float
+    sims: np.ndarray
+
+
+class Seri:
+    """Two-stage retrieval over a SE store."""
+
+    def __init__(self, index: VectorIndex, judge, *, tau_sim: float = 0.9,
+                 tau_lsm: float = 0.9, top_k: int = 4):
+        self.index = index
+        self.judge = judge
+        self.tau_sim = tau_sim
+        self.tau_lsm = tau_lsm
+        self.top_k = top_k
+
+    def retrieve(self, query: str, q_emb: np.ndarray,
+                 store: dict[int, SemanticElement],
+                 now: float) -> SeriResult:
+        se_ids, sims = self.index.search(q_emb, self.top_k, self.tau_sim)
+        # drop expired candidates (freshness is part of validity, §4.1)
+        cands = [
+            store[i] for i in se_ids
+            if i in store and not store[i].expired(now)
+        ]
+        if not cands:
+            return SeriResult(False, None, 0, 0, 0.0, sims)
+        scores = self.judge.score_pairs(
+            [query] * len(cands), [c.key for c in cands]
+        )
+        order = np.argsort(-scores)
+        best = float(scores[order[0]])
+        for j in order:
+            if scores[j] >= self.tau_lsm:
+                return SeriResult(
+                    True, cands[j], len(cands), len(cands), best, sims
+                )
+        return SeriResult(False, None, len(cands), len(cands), best, sims)

@@ -1,0 +1,139 @@
+"""Synthetic semantic world — the ground-truth universe behind the
+behavioural experiments.
+
+The paper evaluates on HotpotQA/Musique/2Wiki/Zilliz questions with a real
+embedding model. Offline, we construct an equivalent *controlled* world:
+
+* N intents; each has a unit-norm cluster center, an answer, a staticity
+  class, a topic group (for correlated trends), and paraphrases.
+* embed(query) = normalize(center + σ_para · noise) — paraphrases of one
+  intent are tightly clustered (cos ≈ 0.97+).
+* A fraction of intents come in *confusable pairs*: centers engineered to
+  cosine ≈ confusable_cos (default 0.93 > τ_sim) with different answers —
+  the "apple nutrition facts" vs "Apple stock price" failure mode that
+  defeats pure-ANN caches and makes the semantic judge necessary (§6.6).
+
+Query strings are structured ("q:<intent>:<paraphrase>") so ground truth
+(same_intent, answer, staticity) is exact and experiments are reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Intent:
+    iid: int
+    answer: str
+    staticity: int
+    topic: int
+    confusable_with: int | None = None
+
+
+class SemanticWorld:
+    def __init__(
+        self,
+        n_intents: int = 1000,
+        dim: int = 128,
+        *,
+        n_topics: int = 10,
+        confusable_frac: float = 0.2,
+        confusable_cos: float = 0.93,
+        sigma_para: float = 0.12,
+        value_bytes: tuple[int, int] = (512, 4096),
+        seed: int = 0,
+    ):
+        self.dim = dim
+        self.sigma_para = sigma_para
+        self.rng = np.random.default_rng(seed)
+        self.n_intents = n_intents
+
+        centers = self.rng.standard_normal((n_intents, dim)).astype(np.float32)
+        centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+        # carve confusable pairs: c_b = cos·c_a + sin·orth
+        n_pairs = int(n_intents * confusable_frac / 2)
+        self.intents: list[Intent] = []
+        pair_partner = {}
+        for p in range(n_pairs):
+            a, b = 2 * p, 2 * p + 1
+            ca = centers[a]
+            orth = self.rng.standard_normal(dim).astype(np.float32)
+            orth -= (orth @ ca) * ca
+            orth /= np.linalg.norm(orth)
+            cos = confusable_cos
+            centers[b] = cos * ca + np.sqrt(1 - cos * cos) * orth
+            pair_partner[a] = b
+            pair_partner[b] = a
+        self.centers = centers
+
+        stat_choices = np.array([1, 2, 3, 5, 7, 9, 10])
+        stat_probs = np.array([0.1, 0.1, 0.15, 0.2, 0.15, 0.15, 0.15])
+        for i in range(n_intents):
+            self.intents.append(
+                Intent(
+                    iid=i,
+                    answer=f"answer-{i}",
+                    staticity=int(self.rng.choice(stat_choices, p=stat_probs)),
+                    topic=int(self.rng.integers(0, n_topics)),
+                    confusable_with=pair_partner.get(i),
+                )
+            )
+        self.value_bytes = value_bytes
+        self._sizes = self.rng.integers(
+            value_bytes[0], value_bytes[1], size=n_intents
+        )
+        # heterogeneous tool economics: ~25% of intents come from an
+        # expensive/slow tool (premium API), the rest from the cheap one —
+        # the heterogeneity LCFU's cost-aware retention exploits (Table 6)
+        premium = self.rng.random(n_intents) < 0.25
+        self._cost_mult = np.where(premium, 8.0, 1.0)
+        self._lat_mult = np.where(premium, 4.0, 1.0)
+
+    # ------------------------------------------------------------ queries
+
+    def query(self, intent: int, paraphrase: int) -> str:
+        return f"q:{intent}:{paraphrase}"
+
+    def intent_of(self, query: str) -> int:
+        return int(query.split(":")[1])
+
+    def same_intent(self, q1: str, q2: str) -> bool:
+        return self.intent_of(q1) == self.intent_of(q2)
+
+    def staticity(self, query: str) -> int:
+        return self.intents[self.intent_of(query)].staticity
+
+    def answer(self, query: str) -> str:
+        return self.intents[self.intent_of(query)].answer
+
+    def value_size(self, query: str) -> int:
+        return int(self._sizes[self.intent_of(query)])
+
+    def topic(self, query: str) -> int:
+        return self.intents[self.intent_of(query)].topic
+
+    def embed(self, query: str) -> np.ndarray:
+        iid = self.intent_of(query)
+        para = int(query.split(":")[2])
+        # deterministic per (intent, paraphrase) noise, unit direction so
+        # cos(paraphrase, center) ≈ 1/√(1+σ²) regardless of dim
+        rng = np.random.default_rng((iid * 1_000_003 + para) & 0x7FFFFFFF)
+        n = rng.standard_normal(self.dim).astype(np.float32)
+        n /= np.linalg.norm(n)
+        v = self.centers[iid] + self.sigma_para * n
+        return (v / np.linalg.norm(v)).astype(np.float32)
+
+    def cost_mult(self, query: str) -> float:
+        return float(self._cost_mult[self.intent_of(query)])
+
+    def latency_mult(self, query: str) -> float:
+        return float(self._lat_mult[self.intent_of(query)])
+
+    # the "live tool": ground truth fetch (used by recalibration too)
+    def fetch(self, query: str) -> str:
+        return self.answer(query)
+
+    def equivalent(self, cached_value, ground_value) -> bool:
+        return cached_value == ground_value

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel for Seri stage-1: fused cosine-similarity + top-k.
+
+TPU adaptation of the paper's Faiss ANN stage (DESIGN.md §3): graph/IVF
+traversal is pointer-chasing and MXU-hostile; on TPU, brute-force tiled
+matmul over the embedding matrix hits ~peak MXU throughput for cache sizes
+up to millions of entries and gives exact (recall=1.0) top-k.
+
+Tiling: the embedding matrix (N, D) streams HBM→VMEM in (TILE_N, D) tiles;
+the query block (B, D) stays resident in VMEM; each grid step computes a
+(TILE_N, B) score tile on the MXU (fp32 accumulation), masks inactive rows,
+and reduces it to per-tile top-K candidates (K passes of max/argmax on the
+VPU — K is small). The (ntiles · K) finalists are merged by a single
+lax.top_k outside the kernel (tiny).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 512
+NEG = -3.0e38  # plain float: jnp scalars would be captured consts in pallas
+
+
+def _ann_kernel(q_ref, emb_ref, mask_ref, vals_ref, idx_ref, *, k: int,
+                tile_n: int):
+    """One grid step: scores for a (tile_n, D) slab; per-tile top-k."""
+    emb = emb_ref[...]
+    q = q_ref[...]
+    s = jax.lax.dot_general(
+        emb, q,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (tile_n, B)
+    mask = mask_ref[...] > 0
+    s = jnp.where(mask[:, None], s, NEG)
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    for j in range(k):
+        v = jnp.max(s, axis=0)           # (B,)
+        i = jnp.argmax(s, axis=0)        # (B,) row within tile
+        vals_ref[0, j, :] = v
+        idx_ref[0, j, :] = i.astype(jnp.int32)
+        s = jnp.where(rows == i[None, :], NEG, s)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "tile_n"))
+def ann_topk(emb, active, q, k: int = 4, *, interpret: bool = True,
+             tile_n: int = TILE_N):
+    """emb (N, D); active (N,); q (B, D) -> (vals (B,k), rows (B,k)).
+
+    interpret=True executes the kernel body on CPU (this container);
+    on TPU pass interpret=False for the Mosaic lowering.
+    """
+    n, d = emb.shape
+    b = q.shape[0]
+    pad = (-n) % tile_n
+    if pad:
+        emb = jnp.pad(emb, ((0, pad), (0, 0)))
+        active = jnp.pad(active.astype(jnp.int32), (0, pad))
+    active = active.astype(jnp.int32)
+    ntiles = (n + pad) // tile_n
+
+    vals, idx = pl.pallas_call(
+        functools.partial(_ann_kernel, k=k, tile_n=tile_n),
+        grid=(ntiles,),
+        in_specs=[
+            pl.BlockSpec((b, d), lambda t: (0, 0)),            # q resident
+            pl.BlockSpec((tile_n, d), lambda t: (t, 0)),       # emb slab
+            pl.BlockSpec((tile_n,), lambda t: (t,)),           # active slab
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k, b), lambda t: (t, 0, 0)),
+            pl.BlockSpec((1, k, b), lambda t: (t, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ntiles, k, b), jnp.float32),
+            jax.ShapeDtypeStruct((ntiles, k, b), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, emb, active)
+
+    # global row ids, then merge the ntiles*k finalists per query
+    base = (jnp.arange(ntiles, dtype=jnp.int32) * tile_n)[:, None, None]
+    gidx = idx + base                                  # (ntiles, k, b)
+    flat_v = vals.reshape(ntiles * k, b).T             # (b, ntiles*k)
+    flat_i = gidx.reshape(ntiles * k, b).T
+    kk = min(k, ntiles * k)
+    top_v, pos = jax.lax.top_k(flat_v, kk)
+    top_i = jnp.take_along_axis(flat_i, pos, axis=1)
+    return top_v, top_i

@@ -1,0 +1,30 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on a
+real TPU the launchers pass interpret=False for the Mosaic lowering. The
+pure-jnp oracles live in kernels.ref; tests sweep shapes/dtypes and
+assert_allclose kernel-vs-ref.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ann_topk import ann_topk
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention_fwd
+
+__all__ = ["ann_topk", "flash_attention_fwd", "decode_attention",
+           "ann_topk_jit"]
+
+
+def ann_topk_jit(emb, active, q, k: int = 4):
+    """VectorIndex backend adapter: single query (D,) -> (sims, rows)."""
+    single = q.ndim == 1
+    if single:
+        q = q[None]
+    vals, rows = ann_topk(
+        jnp.asarray(emb), jnp.asarray(active), jnp.asarray(q), k
+    )
+    if single:
+        return vals[0], rows[0]
+    return vals, rows

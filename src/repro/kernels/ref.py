@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ann_topk_ref(emb, active, q, k):
+    """emb (N, D), active (N,) bool/int, q (B, D) -> (vals (B,k), rows (B,k)).
+
+    Exact cosine top-k (inputs assumed unit-norm) over active rows.
+    """
+    scores = jnp.einsum("nd,bd->bn", emb.astype(jnp.float32),
+                        q.astype(jnp.float32))
+    scores = jnp.where(active.astype(bool)[None, :], scores, -jnp.inf)
+    vals, rows = jax.lax.top_k(scores, k)
+    return vals, rows
+
+
+def flash_attention_ref(q, k, v, scale, causal=True, window=None):
+    """q (B,Sq,KV,G,Dh), k/v (B,Sk,KV,Dh) -> (B,Sq,KV,G,Dh). f32 softmax."""
+    b, sq, kvh, g, dh = q.shape
+    sk = k.shape[1]
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    qi = jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), bool)
+    if causal:
+        m = kj <= qi
+    if window is not None:
+        m = m & (kj > qi - window)
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bkgqs,bskd->bqkgd", p, v.astype(jnp.float32)
+    ).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos, scale):
+    """q (B,KV,G,Dh); caches (B,S,KV,Dh); pos scalar — attend to <= pos."""
+    b, kvh, g, dh = q.shape
+    s_cache = k_cache.shape[1]
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", q.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    ) * scale
+    valid = jnp.arange(s_cache) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum(
+        "bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32)
+    ).astype(q.dtype)

@@ -1,0 +1,241 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds-per-step-per-device:
+
+  compute    = HLO_FLOPs(per device)      / peak_FLOP/s
+  memory     = HLO_bytes(per device)      / HBM_bw
+  collective = wire_bytes(per device)     / link_bw
+
+``cost_analysis()`` is per-partition under SPMD (verified empirically).
+Collective bytes are NOT in cost_analysis: we parse the optimized HLO and
+apply per-op ring-cost models using the parsed replica-group size n:
+
+  all-reduce       2 * size * (n-1)/n     (result size = full tensor)
+  all-gather       size * (n-1)/n         (result = gathered tensor)
+  reduce-scatter   size * (n-1)            (result = shard; input n*size)
+  all-to-all       size * (n-1)/n
+  collective-permute  size
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter, defaultdict
+
+from repro.launch.mesh import HW
+from repro.nn.config import LayerSpec, ModelConfig
+
+_DT_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    by_op: dict = dataclasses.field(default_factory=dict)
+    counts: dict = dataclasses.field(default_factory=dict)
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats(by_op=defaultdict(float), counts=Counter())
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+(\([^)]*\)|\S+)\s+([\w-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(2)
+        base = op.replace("-start", "")
+        if base not in _COLL_OPS or op.endswith("-done"):
+            continue
+        size = _shape_bytes(m.group(1))
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = int(g.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            n = len(gl.group(1).split(",")) if gl else n_devices
+        n = max(n, 1)
+        if base == "all-reduce":
+            wire = 2 * size * (n - 1) / n
+        elif base == "all-gather":
+            wire = size * (n - 1) / n
+        elif base == "reduce-scatter":
+            wire = size * (n - 1)
+        elif base == "all-to-all":
+            wire = size * (n - 1) / n
+        else:  # collective-permute
+            wire = size
+        stats.wire_bytes += wire
+        stats.by_op[base] += wire
+        stats.counts[base] += 1
+    stats.by_op = dict(stats.by_op)
+    stats.counts = dict(stats.counts)
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float           # per device
+    bytes_accessed: float  # per device
+    wire_bytes: float      # per device
+    n_devices: int
+    model_flops: float     # global useful flops (6·N_active·tokens etc.)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / HW["peak_flops_bf16"]
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HW["hbm_bw"]
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / HW["ici_bw"]
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(ts, key=ts.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-flops utilisation at the roofline step time."""
+        denom = self.step_time * HW["peak_flops_bf16"] * self.n_devices
+        return self.model_flops / denom if denom else 0.0
+
+
+# ------------------------------------------------------- model flops
+
+
+def _layer_params(l: LayerSpec, d: int, paper_heads: int | None = None) -> tuple[int, int]:
+    """(active_params, total_params) of one layer (channel+seq mixers)."""
+    act = tot = 0
+    if l.kind == "attn":
+        a = l.attn
+        if a.kind == "mla":
+            p = d * (a.kv_lora_rank + a.qk_rope_dim)
+            if a.q_lora_rank:
+                p += d * a.q_lora_rank + a.q_lora_rank * a.n_heads * (
+                    a.qk_nope_dim + a.qk_rope_dim
+                )
+            else:
+                p += d * a.n_heads * (a.qk_nope_dim + a.qk_rope_dim)
+            p += a.n_heads * a.qk_nope_dim * a.kv_lora_rank
+            p += a.n_heads * a.kv_lora_rank * a.v_head_dim
+            p += a.n_heads * a.v_head_dim * d
+        else:
+            h = paper_heads or a.n_heads
+            p = d * h * a.head_dim * 2 + d * a.n_kv_heads * a.head_dim * 2
+        act += p
+        tot += p
+        if l.cross_attn:
+            ca = d * a.n_heads * a.head_dim * 2 + d * a.n_kv_heads * a.head_dim * 2
+            act += ca
+            tot += ca
+    elif l.kind == "mamba":
+        m = l.mamba
+        di = m.expand * d
+        dtr = m.dt_rank or -(-d // 16)
+        p = d * 2 * di + m.d_conv * di + di * (dtr + 2 * m.d_state) + \
+            dtr * di + di * d
+        act += p
+        tot += p
+    elif l.kind == "mlstm":
+        xc = l.xlstm
+        di = int(xc.proj_factor * d)
+        p = d * 2 * di + 3 * di * di + di * d
+        act += p
+        tot += p
+    elif l.kind == "slstm":
+        xc = l.xlstm
+        dh = d // xc.n_heads
+        p = d * 4 * d + xc.n_heads * dh * 4 * dh + d * d
+        act += p
+        tot += p
+    if l.moe is not None:
+        mo = l.moe
+        routed_one = 3 * d * mo.d_ff_expert
+        act += mo.top_k * routed_one
+        tot += mo.n_experts * routed_one
+        act += d * mo.n_experts  # router
+        tot += d * mo.n_experts
+        if mo.n_shared:
+            sh = 3 * d * (mo.d_ff_shared or mo.d_ff_expert * mo.n_shared)
+            act += sh
+            tot += sh
+    elif l.d_ff:
+        n_mats = 3 if l.ffn_act == "swiglu" else 2
+        act += n_mats * d * l.d_ff
+        tot += n_mats * d * l.d_ff
+    return act, tot
+
+
+def active_params(cfg: ModelConfig, paper_heads: int | None = None) -> tuple[int, int]:
+    """(active, total) parameter counts — analytic, from the config."""
+    act = tot = 0
+    for l in cfg.layer_iter():
+        a, t = _layer_params(l, cfg.d_model, paper_heads)
+        act += a
+        tot += t
+    if cfg.enc_dec:
+        for _ in range(cfg.enc_repeat):
+            for l in cfg.enc_blocks:
+                a, t = _layer_params(l, cfg.d_model, paper_heads)
+                act += a
+                tot += t
+    # unembedding projection participates in compute
+    act += cfg.d_model * cfg.vocab_size
+    tot += cfg.d_model * cfg.vocab_size
+    if not cfg.tie_embeddings:
+        tot += cfg.d_model * cfg.vocab_size  # input table (gather only)
+    return act, tot
+
+
+def model_flops(cfg: ModelConfig, kind: str, tokens: int,
+                paper_heads: int | None = None) -> float:
+    """MODEL_FLOPS = 6·N_active·tokens (train) or 2·N_active·tokens
+    (prefill/decode forward). Attention score/value FLOPs are intentionally
+    excluded (the brief's 6·N·D definition); the useful-flops ratio then
+    also exposes quadratic-attention overhead at long context."""
+    act, _ = active_params(cfg, paper_heads)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * act * tokens

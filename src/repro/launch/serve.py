@@ -1,0 +1,123 @@
+"""Serving driver: run the Cortex engine on a chosen workload and mode.
+
+  PYTHONPATH=src python -m repro.launch.serve --workload zipf --mode cortex
+  PYTHONPATH=src python -m repro.launch.serve --workload swe \
+      --mode cortex --cache-ratio 0.6 --concurrency 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core.cache import make_cache
+from repro.core.judge import OracleJudge
+from repro.data.workloads import swe_workload, trend_workload, zipf_workload
+from repro.data.world import SemanticWorld
+from repro.serving.engine import Engine, EngineConfig, ExactCache
+from repro.serving.gpu import GPU, GPUConfig
+from repro.serving.remote import RemoteDataService
+
+
+def build_workload(world, name: str, n: int, seed: int, zipf_s: float = 0.99):
+    if name == "zipf":
+        return zipf_workload(world, n, seed=seed, zipf_s=zipf_s)
+    if name == "trend":
+        return trend_workload(world, n, seed=seed)
+    if name == "swe":
+        return swe_workload(world, max(n // 5, 1), seed=seed)
+    raise ValueError(name)
+
+
+def run_once(
+    *,
+    workload: str = "zipf",
+    mode: str = "cortex",
+    n_requests: int = 800,
+    cache_ratio: float = 0.4,
+    n_intents: int = 1000,
+    dim: int = 128,
+    eviction: str = "lcfu",
+    concurrency: int | None = None,
+    qpm: float | None = 100.0,
+    colocated: bool = True,
+    judge_acc: float = 0.98,
+    recalibrate_every: float | None = None,
+    prefetch: bool = True,
+    max_ttl: float = 3600.0,
+    zipf_s: float = 0.99,
+    em_p_base: float = 0.79,
+    judge_timeout: float = 0.25,
+    warmup_frac: float = 0.0,
+    seed: int = 0,
+) -> dict:
+    world = SemanticWorld(n_intents=n_intents, dim=dim, seed=seed)
+    reqs = build_workload(world, workload, n_requests, seed + 1, zipf_s=zipf_s)
+    cap = int(cache_ratio * world._sizes.sum())
+    cache = exact = None
+    if mode in ("cortex", "cortex-nojudge"):
+        judge = OracleJudge(world, accuracy=judge_acc, seed=seed + 2)
+        cache = make_cache(
+            capacity_bytes=cap, dim=dim, judge=judge, eviction=eviction,
+            max_ttl=max_ttl,
+        )
+    elif mode == "exact":
+        exact = ExactCache(cap, max_ttl=max_ttl)
+    eng = Engine(
+        world=world,
+        requests=reqs,
+        mode=mode,
+        cache=cache,
+        exact=exact,
+        remote=RemoteDataService(qpm=qpm, seed=seed + 3),
+        gpu=GPU(GPUConfig(colocated=colocated)),
+        cfg=EngineConfig(
+            closed_loop=concurrency,
+            prefetch=prefetch,
+            recalibrate_every=recalibrate_every,
+            em_p_base=em_p_base,
+            judge_timeout=judge_timeout,
+            warmup_frac=warmup_frac,
+            seed=seed + 4,
+        ),
+    )
+    return eng.run()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="zipf",
+                    choices=["zipf", "trend", "swe"])
+    ap.add_argument("--mode", default="cortex",
+                    choices=["vanilla", "exact", "cortex", "cortex-nojudge"])
+    ap.add_argument("--n-requests", type=int, default=800)
+    ap.add_argument("--cache-ratio", type=float, default=0.4)
+    ap.add_argument("--eviction", default="lcfu",
+                    choices=["lcfu", "lru", "lfu"])
+    ap.add_argument("--concurrency", type=int, default=None)
+    ap.add_argument("--qpm", type=float, default=100.0)
+    ap.add_argument("--no-rate-limit", action="store_true")
+    ap.add_argument("--dedicated-judge", action="store_true")
+    ap.add_argument("--no-prefetch", action="store_true")
+    ap.add_argument("--recalibrate-every", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    s = run_once(
+        workload=args.workload,
+        mode=args.mode,
+        n_requests=args.n_requests,
+        cache_ratio=args.cache_ratio,
+        eviction=args.eviction,
+        concurrency=args.concurrency,
+        qpm=None if args.no_rate_limit else args.qpm,
+        colocated=not args.dedicated_judge,
+        recalibrate_every=args.recalibrate_every,
+        prefetch=not args.no_prefetch,
+        seed=args.seed,
+    )
+    print(json.dumps(s, indent=2, default=float))
+    return s
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""jit-able step builders shared by dryrun.py, train.py and serve.py."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.models.lm import LM
+from repro.nn import runtime
+from repro.nn.config import ModelConfig
+from repro.nn.sharding import ShardCtx
+from repro.train.optim import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, mesh: Optional[Mesh],
+                    opt_cfg: AdamWConfig, remat: str = "dots",
+                    microbatches: int = 1, accum_dtype=jnp.float32,
+                    shard_cfg=None):
+    """Train step with optional gradient accumulation over microbatches
+    (lax.scan; activation memory scales 1/μ, FSDP all-gathers scale ×μ —
+    the classic memory/collective trade recorded per cell in §Roofline)."""
+    lm = LM(cfg)
+    ctx = ShardCtx(mesh, shard_cfg)
+
+    def loss_fn(p, mb):
+        loss, aux = lm.loss_and_aux(ctx, p, mb, remat=remat)
+        return loss
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split_mb(key, t):
+                if key == "positions" and t.ndim == 3:  # (3, B, S) M-RoPE
+                    r = t.reshape(
+                        t.shape[0], microbatches,
+                        t.shape[1] // microbatches, t.shape[2],
+                    )
+                    return jnp.moveaxis(r, 1, 0)  # (μ, 3, B/μ, S)
+                return t.reshape(
+                    microbatches, t.shape[0] // microbatches, *t.shape[1:]
+                )
+
+            mb_batch = {k: split_mb(k, v) for k, v in batch.items()}
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g
+                )
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+            (grads, loss), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), mb_batch,
+                unroll=runtime.unroll_for(microbatches),
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+        new_params, new_state, metrics = adamw_update(
+            opt_cfg, params, grads, opt_state
+        )
+        return new_params, new_state, {"loss": loss, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Optional[Mesh]):
+    lm = LM(cfg)
+    ctx = ShardCtx(mesh)
+
+    def prefill_step(params, batch):
+        return lm.prefill(ctx, params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Optional[Mesh]):
+    lm = LM(cfg)
+    ctx = ShardCtx(mesh)
+
+    def serve_step(params, tokens, caches, pos):
+        logits, new_caches = lm.decode(ctx, params, tokens, caches, pos)
+        return logits, new_caches
+
+    return serve_step

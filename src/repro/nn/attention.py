@@ -1,0 +1,371 @@
+"""Attention flavors: GQA (full / sliding-window / cross) and MLA (DeepSeek).
+
+Cache layouts
+-------------
+* GQA:  {"k": (B, S_cache, Kv, Dh), "v": (B, S_cache, Kv, Dh)}
+        sliding-window layers use a ring buffer of S_cache = window.
+* MLA:  {"latent": (B, S_cache, kv_lora), "k_rope": (B, S_cache, qk_rope)}
+        — the compressed per-token latent is all that is stored; decode uses
+        the weight-absorbed formulation (score via latent, no K expansion).
+
+All applies run on a 1-device test mesh and on the production mesh; sharding
+constraints are best-effort (see nn.sharding).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.basic import apply_rope, rmsnorm, rmsnorm_specs
+from repro.nn.config import AttnConfig
+from repro.nn.flash import sdpa_flash
+from repro.nn.param import ParamSpec
+from repro.nn.sharding import ShardCtx
+
+NEG_INF = -1e30
+
+# cache-less (train/prefill) attention uses the chunked flash path once the
+# sequence exceeds this; below it the plain masked softmax is cheaper.
+FLASH_THRESHOLD = 512
+
+
+def flash_chunk(sq: int) -> int:
+    """Tile edge: 1k tiles at training lengths (bwd keeps 3 f32 tiles
+    live), 2k at prefill lengths (fwd-only, bigger MXU tiles)."""
+    return 1024 if sq <= 8192 else 2048
+
+
+# =================================================================== GQA
+
+
+def gqa_specs(cfg: AttnConfig, d_model: int, dtype) -> dict:
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    out = {
+        "wq": ParamSpec((d_model, h * dh), dtype, ("fsdp", "model")),
+        "wk": ParamSpec((d_model, kv * dh), dtype, ("fsdp", "model")),
+        "wv": ParamSpec((d_model, kv * dh), dtype, ("fsdp", "model")),
+        "wo": ParamSpec((h * dh, d_model), dtype, ("model", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamSpec((h * dh,), jnp.float32, ("model",), init="zeros")
+        out["bk"] = ParamSpec((kv * dh,), jnp.float32, ("model",), init="zeros")
+        out["bv"] = ParamSpec((kv * dh,), jnp.float32, ("model",), init="zeros")
+    return out
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(*x.shape[:-1], n, dh)
+
+
+def _sdpa(ctx: ShardCtx, q, k, v, mask, scale):
+    """q: (B,Sq,H,Dh), k/v: (B,Sk,Kv,Dh); GQA via head grouping."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, sq, kvh, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def _causal_mask(sq: int, sk: int, q_offset, window: Optional[int]):
+    """(sq, sk) boolean mask. q position i (global) = q_offset + i."""
+    qi = q_offset + jnp.arange(sq)[:, None]
+    kj = jnp.arange(sk)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m = m & (kj > qi - window)
+    return m
+
+
+def gqa_apply(
+    ctx: ShardCtx,
+    p,
+    cfg: AttnConfig,
+    x,
+    positions,
+    cache: Optional[dict] = None,
+    cache_pos=None,
+    kv_override=None,
+    attn_fn=None,
+):
+    """Returns (out, new_cache).
+
+    * train / prefill:  cache is None -> full causal self-attention. When the
+      caller wants a cache back, use ``gqa_prefill`` (returns k/v).
+    * decode: cache given, x is (B, 1, D), cache_pos is the write index.
+    * cross-attention: kv_override=(k, v) precomputed from the encoder.
+    """
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, sq, _ = x.shape
+    scale = 1.0 / math.sqrt(dh)
+
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+    q = ctx.constrain(q, "dp", None, "model")
+    q = _split_heads(q, h, dh)
+
+    if kv_override is not None:
+        k, v = kv_override
+        if cfg.rope_kind != "none":
+            q = apply_rope(cfg, q, positions)
+        mask = jnp.ones((b, sq, k.shape[1]), bool)
+        out = _sdpa(ctx, q, k, v, mask, scale)
+        new_cache = cache
+    else:
+        k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+        v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+        if cfg.qkv_bias:
+            k = k + p["bk"].astype(k.dtype)
+            v = v + p["bv"].astype(v.dtype)
+        k = _split_heads(k, kv, dh)
+        v = _split_heads(v, kv, dh)
+        if cfg.rope_kind != "none":
+            q = apply_rope(cfg, q, positions)
+            k = apply_rope(cfg, k, positions)
+
+        if cache is None:
+            if attn_fn is not None:
+                out = attn_fn(q, k, v, cfg.window)
+            elif sq > FLASH_THRESHOLD:
+                out = sdpa_flash(
+                    q, k, v, scale, causal=True, window=cfg.window,
+                    chunk=min(flash_chunk(sq), sq),
+                )
+            else:
+                mask = _causal_mask(sq, sq, 0, cfg.window)[None]
+                out = _sdpa(ctx, q, k, v, mask, scale)
+            new_cache = {"k": k, "v": v}
+        else:
+            # decode: write k/v into the cache at cache_pos (ring for window)
+            s_cache = cache["k"].shape[1]
+            write = (
+                cache_pos % s_cache if cfg.window is not None else cache_pos
+            )
+            quant = cache["k"].dtype == jnp.int8
+            if quant:
+                # int8 KV (per-token-per-head absmax scales): halves the
+                # decode memory-roofline term; the Pallas decode kernel
+                # dequantises in VMEM (§Perf iteration 2)
+                k8, ks = _kv_quantize(k)
+                v8, vs = _kv_quantize(v)
+                ck = _dyn_write(cache["k"], k8, write)
+                cv = _dyn_write(cache["v"], v8, write)
+                cks = _dyn_write(cache["k_scale"], ks, write)
+                cvs = _dyn_write(cache["v_scale"], vs, write)
+                kf = ck.astype(k.dtype) * cks.astype(k.dtype)[..., None]
+                vf = cv.astype(v.dtype) * cvs.astype(v.dtype)[..., None]
+                new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs}
+            else:
+                ck = _dyn_write(cache["k"], k, write)
+                cv = _dyn_write(cache["v"], v, write)
+                kf, vf = ck, cv
+                new_cache = {"k": ck, "v": cv}
+            kj = jnp.arange(s_cache)
+            if cfg.window is not None:
+                valid = (kj <= (cache_pos % s_cache)) | (cache_pos >= s_cache)
+            else:
+                valid = kj <= cache_pos
+            mask = jnp.broadcast_to(valid[None, None, :], (b, sq, s_cache))
+            out = _sdpa(ctx, q, kf, vf, mask, scale)
+
+    out = out.reshape(b, sq, h * dh)
+    out = ctx.constrain(out, "dp", None, "model")
+    y = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return ctx.constrain(y, "dp", None, None), new_cache
+
+
+def _dyn_write(buf, val, idx):
+    """dynamic_update_slice along seq dim (axis=1) at per-batch-shared idx."""
+    if buf.dtype == jnp.int8:
+        val = jnp.clip(jnp.round(val), -127, 127).astype(jnp.int8) \
+            if val.dtype != jnp.int8 else val
+    return jax.lax.dynamic_update_slice_in_dim(
+        buf, val.astype(buf.dtype), idx, 1
+    )
+
+
+def _kv_quantize(x):
+    """x (B,S,KV,Dh) -> (int8 values, f16 absmax scales (B,S,KV))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale.astype(jnp.float16)
+
+
+def gqa_cache_specs(cfg: AttnConfig, batch: int, s_cache: int, dtype,
+                    quant: bool = False) -> dict:
+    if cfg.window is not None:
+        s_cache = min(s_cache, cfg.window)
+    shp = (batch, s_cache, cfg.n_kv_heads, cfg.head_dim)
+    axes = ("dp", "seq" if batch == 1 else "kv_seq", None, None)
+    if quant:
+        sshp = shp[:-1]
+        saxes = axes[:-1]
+        return {
+            "k": ParamSpec(shp, jnp.int8, axes, init="zeros"),
+            "v": ParamSpec(shp, jnp.int8, axes, init="zeros"),
+            "k_scale": ParamSpec(sshp, jnp.float16, saxes, init="zeros"),
+            "v_scale": ParamSpec(sshp, jnp.float16, saxes, init="zeros"),
+        }
+    return {
+        "k": ParamSpec(shp, dtype, axes, init="zeros"),
+        "v": ParamSpec(shp, dtype, axes, init="zeros"),
+    }
+
+
+# =================================================================== MLA
+
+
+def mla_specs(cfg: AttnConfig, d_model: int, dtype) -> dict:
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lq, lkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    out = {}
+    if lq:
+        out["wq_a"] = ParamSpec((d_model, lq), dtype, ("fsdp", None))
+        out["q_norm"] = rmsnorm_specs(lq)
+        out["wq_b"] = ParamSpec((lq, h * (dn + dr)), dtype, ("fsdp", "model"))
+    else:
+        out["wq"] = ParamSpec((d_model, h * (dn + dr)), dtype, ("fsdp", "model"))
+    out["wkv_a"] = ParamSpec((d_model, lkv + dr), dtype, ("fsdp", None))
+    out["kv_norm"] = rmsnorm_specs(lkv)
+    # up-projections: per-head K (nope) and V from the latent
+    out["w_uk"] = ParamSpec((h, dn, lkv), dtype, ("model", None, None))
+    out["w_uv"] = ParamSpec((h, lkv, dv), dtype, ("model", None, None))
+    out["wo"] = ParamSpec((h * dv, d_model), dtype, ("model", "fsdp"))
+    return out
+
+
+def _mla_q(ctx, p, cfg: AttnConfig, x, positions, eps):
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    b, s, _ = x.shape
+    if cfg.q_lora_rank:
+        qa = jnp.einsum("bsd,dl->bsl", x, p["wq_a"])
+        qa = rmsnorm(p["q_norm"], qa, eps)
+        q = jnp.einsum("bsl,lh->bsh", qa, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    q = ctx.constrain(q, "dp", None, "model").reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(cfg, q_rope, positions)
+    return q_nope, q_rope
+
+
+def mla_apply(
+    ctx: ShardCtx,
+    p,
+    cfg: AttnConfig,
+    x,
+    positions,
+    cache: Optional[dict] = None,
+    cache_pos=None,
+    eps: float = 1e-6,
+):
+    """MLA attention. Prefill/train expands K/V per head; decode uses the
+    weight-absorbed latent formulation (no K/V expansion, cache = latent)."""
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lkv = cfg.kv_lora_rank
+    b, sq, _ = x.shape
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q_nope, q_rope = _mla_q(ctx, p, cfg, x, positions, eps)
+
+    kv = jnp.einsum("bsd,dl->bsl", x, p["wkv_a"])
+    latent = rmsnorm(p["kv_norm"], kv[..., :lkv], eps)
+    k_rope = apply_rope(
+        cfg, kv[..., lkv:][:, :, None, :], positions
+    )[:, :, 0, :]  # (B,S,dr) shared across heads
+
+    if cache is None:
+        # train/prefill: expand per-head keys/values from the latent
+        k_nope = jnp.einsum("bsl,hdl->bshd", latent, p["w_uk"])
+        v = jnp.einsum("bsl,hlv->bshv", latent, p["w_uv"])
+        if sq > FLASH_THRESHOLD:
+            # fold the shared rope-key into per-head keys; pad V with zeros
+            # so flash's single (q·k, p·v) pipeline applies unchanged.
+            q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+            k_full = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(
+                    k_rope[:, :, None, :], (b, sq, h, dr)
+                )], axis=-1,
+            )
+            v_pad = jnp.concatenate(
+                [v, jnp.zeros((b, sq, h, dn + dr - dv), v.dtype)], axis=-1
+            ) if dn + dr > dv else v
+            out = sdpa_flash(
+                q_full, k_full, v_pad, scale, causal=True,
+                chunk=min(flash_chunk(sq), sq),
+            )[..., :dv]
+        else:
+            mask = _causal_mask(sq, sq, 0, None)[None]
+            scores = (
+                jnp.einsum("bqhd,bshd->bhqs", q_nope, k_nope)
+                + jnp.einsum("bqhd,bsd->bhqs", q_rope, k_rope)
+            ).astype(jnp.float32) * scale
+            scores = jnp.where(mask[:, None], scores, NEG_INF)
+            probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+            out = jnp.einsum("bhqs,bshv->bqhv", probs, v)
+        new_cache = {"latent": latent, "k_rope": k_rope}
+    else:
+        cl = _dyn_write(cache["latent"], latent, cache_pos)
+        cr = _dyn_write(cache["k_rope"], k_rope, cache_pos)
+        s_cache = cl.shape[1]
+        # absorbed: q' = q_nope @ w_uk -> score against the latent directly
+        q_abs = jnp.einsum("bqhd,hdl->bqhl", q_nope, p["w_uk"])
+        scores = (
+            jnp.einsum("bqhl,bsl->bhqs", q_abs, cl)
+            + jnp.einsum("bqhd,bsd->bhqs", q_rope, cr)
+        ).astype(jnp.float32) * scale
+        valid = jnp.arange(s_cache) <= cache_pos
+        scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cl.dtype)
+        ctx_lat = jnp.einsum("bhqs,bsl->bqhl", probs, cl)
+        out = jnp.einsum("bqhl,hlv->bqhv", ctx_lat, p["w_uv"])
+        new_cache = {"latent": cl, "k_rope": cr}
+
+    out = ctx.constrain(out.reshape(b, sq, h * dv), "dp", None, "model")
+    y = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return ctx.constrain(y, "dp", None, None), new_cache
+
+
+def mla_cache_specs(cfg: AttnConfig, batch: int, s_cache: int, dtype) -> dict:
+    axes = ("dp", "seq" if batch == 1 else "kv_seq", None)
+    return {
+        "latent": ParamSpec(
+            (batch, s_cache, cfg.kv_lora_rank), dtype, axes, init="zeros"
+        ),
+        "k_rope": ParamSpec(
+            (batch, s_cache, cfg.qk_rope_dim), dtype, axes, init="zeros"
+        ),
+    }
+
+
+# ============================================================ cross-attn
+
+
+def cross_kv_specs(cfg: AttnConfig, d_model: int, dtype) -> dict:
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wk": ParamSpec((d_model, kv * dh), dtype, ("fsdp", "model")),
+        "wv": ParamSpec((d_model, kv * dh), dtype, ("fsdp", "model")),
+    }
+
+
+def cross_kv(ctx: ShardCtx, p, cfg: AttnConfig, enc_out):
+    k = _split_heads(
+        jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]), cfg.n_kv_heads, cfg.head_dim
+    )
+    v = _split_heads(
+        jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]), cfg.n_kv_heads, cfg.head_dim
+    )
+    return k, v

@@ -1,0 +1,137 @@
+"""Norms, embeddings, rotary embeddings (RoPE + M-RoPE), dense FFNs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.config import AttnConfig
+from repro.nn.param import ParamSpec
+from repro.nn.sharding import ShardCtx
+
+# ---------------------------------------------------------------- norms
+
+
+def rmsnorm_specs(d: int) -> dict:
+    return {"scale": ParamSpec((d,), jnp.float32, (None,), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_specs(d: int) -> dict:
+    return {
+        "scale": ParamSpec((d,), jnp.float32, (None,), init="ones"),
+        "bias": ParamSpec((d,), jnp.float32, (None,), init="zeros"),
+    }
+
+
+def layernorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embedding
+
+
+def embedding_specs(vocab: int, d: int, dtype) -> dict:
+    # vocab-sharded over the model axis (Megatron-style), fsdp over d
+    return {
+        "table": ParamSpec((vocab, d), dtype, ("model", "fsdp"), scale=0.02)
+    }
+
+
+def embed(ctx: ShardCtx, p, tokens):
+    out = jnp.take(p["table"], tokens, axis=0)
+    return ctx.constrain(out, "dp", None, None)
+
+
+def unembed(ctx: ShardCtx, p, x):
+    logits = jnp.einsum("...d,vd->...v", x, p["table"])
+    return ctx.constrain(logits, "dp", None, "model")
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_freqs(cfg: AttnConfig, rot_dim: int):
+    half = rot_dim // 2
+    return 1.0 / (
+        cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+
+
+def _rotate(x, sin, cos):
+    # x: (..., rot_dim); sin/cos: (..., rot_dim/2)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(cfg: AttnConfig, x, positions, rot_dim: int | None = None):
+    """x: (B, S, H, Dh) [rope applied to the first rot_dim dims];
+    positions: (B, S) int32 or (3, B, S) for M-RoPE."""
+    rot = rot_dim or x.shape[-1]
+    inv = rope_freqs(cfg, rot)  # (rot/2,)
+    if cfg.rope_kind == "mrope":
+        # positions (3, B, S): temporal / height / width streams; the
+        # frequency bands are split between the three streams (Qwen2-VL §3).
+        # Text-only steps may pass (B, S): all three streams coincide.
+        if positions.ndim == 2:
+            positions = jnp.broadcast_to(positions[None], (3, *positions.shape))
+        ang = positions[..., None].astype(jnp.float32) * inv  # (3, B, S, rot/2)
+        secs = cfg.mrope_sections
+        # build per-band selector: band i belongs to stream s(i)
+        idx = jnp.concatenate(
+            [jnp.full((n,), i, jnp.int32) for i, n in enumerate(secs)]
+        )
+        idx = idx[: rot // 2]
+        sel = jax.nn.one_hot(idx, len(secs), dtype=jnp.float32)  # (rot/2, 3)
+        ang = jnp.einsum("sbtf,fs->btf", ang, sel)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, rot/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[:, :, None, :].astype(x.dtype)
+    cos = cos[:, :, None, :].astype(x.dtype)
+    if rot == x.shape[-1]:
+        return _rotate(x, sin, cos)
+    xr, xp = x[..., :rot], x[..., rot:]
+    return jnp.concatenate([_rotate(xr, sin, cos), xp], axis=-1)
+
+
+# ---------------------------------------------------------------- dense FFN
+
+
+def ffn_specs(d: int, d_ff: int, dtype, act: str = "swiglu") -> dict:
+    if act == "swiglu":
+        return {
+            "w_gate": ParamSpec((d, d_ff), dtype, ("fsdp", "model")),
+            "w_up": ParamSpec((d, d_ff), dtype, ("fsdp", "model")),
+            "w_down": ParamSpec((d_ff, d), dtype, ("model", "fsdp")),
+        }
+    return {
+        "w_up": ParamSpec((d, d_ff), dtype, ("fsdp", "model")),
+        "b_up": ParamSpec((d_ff,), jnp.float32, ("model",), init="zeros"),
+        "w_down": ParamSpec((d_ff, d), dtype, ("model", "fsdp")),
+        "b_down": ParamSpec((d,), jnp.float32, (None,), init="zeros"),
+    }
+
+
+def ffn(ctx: ShardCtx, p, x, act: str = "swiglu"):
+    if act == "swiglu":
+        h = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["w_up"])
+        h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["w_up"]) + p["b_up"].astype(x.dtype)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = ctx.constrain(h, "dp", None, "model")
+    out = jnp.einsum("...f,fd->...d", h, p["w_down"])
+    if act != "swiglu":
+        out = out + p["b_down"].astype(x.dtype)
+    return ctx.constrain(out, "dp", None, None)

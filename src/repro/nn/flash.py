@@ -1,0 +1,188 @@
+"""Flash attention in pure JAX (chunked online-softmax, custom_vjp).
+
+This is the memory-safe attention used by every train/prefill path: the
+(Sq × Sk) score matrix is never materialised — only (chunk × chunk) tiles.
+The backward pass is the explicit FlashAttention-2 recomputation (not AD
+through the forward scans), so activation memory is O(S·Dh) and the HLO
+FLOPs of both passes are exact, which the roofline extraction relies on.
+
+The Pallas TPU kernel in repro.kernels.flash_attention implements the same
+tiling for the MXU; this module doubles as its oracle.
+
+Layout: q (B, Sq, KV, G, Dh) — G = query-group fan-out per KV head (GQA);
+k, v (B, Sk, KV, Dh). Masking: causal with q_offset, optional sliding
+window. All softmax math in f32.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import runtime
+
+NEG_INF = -1e30
+
+
+def _mask(qi, kj, causal: bool, window):
+    m = jnp.ones(jnp.broadcast_shapes(qi.shape, kj.shape), bool)
+    if causal:
+        m = kj <= qi
+    if window is not None:
+        m = m & (kj > qi - window)
+    return m
+
+
+@partial(
+    jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7)
+)
+def flash_attention(q, k, v, scale, causal=True, window=None, q_offset=0,
+                    chunk=1024):
+    out, _ = _flash_fwd(q, k, v, scale, causal, window, q_offset, chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, scale, causal, window, q_offset, chunk):
+    b, sq, kvh, g, dh = q.shape
+    sk = k.shape[1]
+    cq = min(chunk, sq)
+    ck = min(chunk, sk)
+    assert sq % cq == 0 and sk % ck == 0, (sq, sk, chunk)
+    nq, nk = sq // cq, sk // ck
+    qf = jnp.moveaxis(q, 1, 3)  # (B,KV,G,Sq,Dh)
+
+    def q_chunk_body(_, qi_idx):
+        qc = jax.lax.dynamic_slice_in_dim(qf, qi_idx * cq, cq, axis=3)
+        qpos = q_offset + qi_idx * cq + jnp.arange(cq)
+
+        def k_chunk_body(carry, kj_idx):
+            m_run, l_run, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(k, kj_idx * ck, ck, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, kj_idx * ck, ck, axis=1)
+            kpos = kj_idx * ck + jnp.arange(ck)
+            s = jnp.einsum(
+                "bkgqd,bskd->bkgqs", qc, kc,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            msk = _mask(qpos[:, None], kpos[None, :], causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kvh, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, cq, dh), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            k_chunk_body, (m0, l0, a0), jnp.arange(nk),
+            unroll=runtime.unroll_for(nk),
+        )
+        l_safe = jnp.maximum(l_f, 1e-30)
+        o = (acc / l_safe[..., None]).astype(q.dtype)
+        lse = m_f + jnp.log(l_safe)
+        return None, (o, lse)
+
+    _, (o_chunks, lse_chunks) = jax.lax.scan(
+        q_chunk_body, None, jnp.arange(nq), unroll=runtime.unroll_for(nq)
+    )
+    # o_chunks: (nq, B,KV,G,cq,Dh) -> (B,Sq,KV,G,Dh)
+    o = jnp.moveaxis(o_chunks, 0, 3).reshape(b, kvh, g, sq, dh)
+    o = jnp.moveaxis(o, 3, 1)
+    lse = jnp.moveaxis(lse_chunks, 0, 3).reshape(b, kvh, g, sq)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(scale, causal, window, q_offset, chunk, res, dout):
+    q, k, v, o, lse = res
+    b, sq, kvh, g, dh = q.shape
+    sk = k.shape[1]
+    cq = min(chunk, sq)
+    ck = min(chunk, sk)
+    nq, nk = sq // cq, sk // ck
+    qf = jnp.moveaxis(q, 1, 3)          # (B,KV,G,Sq,Dh)
+    dof = jnp.moveaxis(dout, 1, 3)      # (B,KV,G,Sq,Dh)
+    of = jnp.moveaxis(o, 1, 3)
+    # D_i = rowsum(dO * O)
+    delta = jnp.sum(
+        dof.astype(jnp.float32) * of.astype(jnp.float32), axis=-1
+    )  # (B,KV,G,Sq)
+
+    def k_chunk_body(dq_acc, kj_idx):
+        kc = jax.lax.dynamic_slice_in_dim(k, kj_idx * ck, ck, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, kj_idx * ck, ck, axis=1)
+        kpos = kj_idx * ck + jnp.arange(ck)
+
+        def q_chunk_body(carry, qi_idx):
+            dk_acc, dv_acc = carry
+            qc = jax.lax.dynamic_slice_in_dim(qf, qi_idx * cq, cq, axis=3)
+            doc = jax.lax.dynamic_slice_in_dim(dof, qi_idx * cq, cq, axis=3)
+            lse_c = jax.lax.dynamic_slice_in_dim(lse, qi_idx * cq, cq, axis=3)
+            dlt_c = jax.lax.dynamic_slice_in_dim(delta, qi_idx * cq, cq, axis=3)
+            qpos = q_offset + qi_idx * cq + jnp.arange(cq)
+            s = jnp.einsum(
+                "bkgqd,bskd->bkgqs", qc, kc,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            msk = _mask(qpos[:, None], kpos[None, :], causal, window)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_c[..., None])  # (B,KV,G,cq,ck)
+            dp = jnp.einsum(
+                "bkgqd,bskd->bkgqs", doc.astype(jnp.float32),
+                vc.astype(jnp.float32),
+            )
+            ds = p * (dp - dlt_c[..., None]) * scale
+            dv_new = dv_acc + jnp.einsum(
+                "bkgqs,bkgqd->bskd", p, doc.astype(jnp.float32)
+            )
+            dk_new = dk_acc + jnp.einsum(
+                "bkgqs,bkgqd->bskd", ds, qc.astype(jnp.float32)
+            )
+            dq_c = jnp.einsum(
+                "bkgqs,bskd->bkgqd", ds.astype(qc.dtype), kc,
+                preferred_element_type=jnp.float32,
+            )
+            return (dk_new, dv_new), dq_c
+
+        dk0 = jnp.zeros((b, ck, kvh, dh), jnp.float32)
+        dv0 = jnp.zeros((b, ck, kvh, dh), jnp.float32)
+        (dk_c, dv_c), dq_chunks = jax.lax.scan(
+            q_chunk_body, (dk0, dv0), jnp.arange(nq),
+            unroll=runtime.unroll_for(nq),
+        )
+        # dq_chunks (nq,B,KV,G,cq,Dh) is ordered: fold into (B,KV,G,Sq,Dh)
+        dq_inc = jnp.moveaxis(dq_chunks, 0, 3).reshape(b, kvh, g, sq, dh)
+        return dq_acc + dq_inc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, kvh, g, sq, dh), jnp.float32)
+    dq_f, (dk_chunks, dv_chunks) = jax.lax.scan(
+        k_chunk_body, dq0, jnp.arange(nk), unroll=runtime.unroll_for(nk)
+    )
+    dq = jnp.moveaxis(dq_f, 3, 1).astype(q.dtype)  # (B,Sq,KV,G,Dh)
+    dk = jnp.moveaxis(dk_chunks, 0, 1).reshape(b, sk, kvh, dh).astype(k.dtype)
+    dv = jnp.moveaxis(dv_chunks, 0, 1).reshape(b, sk, kvh, dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(
+    lambda q, k, v, scale, causal, window, q_offset, chunk: _flash_fwd(
+        q, k, v, scale, causal, window, q_offset, chunk
+    ),
+    _flash_bwd,
+)
+
+
+def sdpa_flash(q, k, v, scale, causal=True, window=None, q_offset=0,
+               chunk=1024):
+    """(B,Sq,H,Dh) x (B,Sk,KVH,Dh) GQA wrapper around flash_attention."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, sq, kvh, h // kvh, dh)
+    out = flash_attention(qg, k, v, scale, causal, window, q_offset, chunk)
+    return out.reshape(b, sq, h, dh)

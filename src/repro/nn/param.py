@@ -1,0 +1,135 @@
+"""Declarative parameter system.
+
+Every module describes its parameters as a pytree of :class:`ParamSpec`.
+From a spec tree we can derive, without ever allocating the real arrays:
+
+* ``struct_tree``  -> ``jax.ShapeDtypeStruct`` tree (multi-pod dry-run inputs)
+* ``pspec_tree``   -> ``PartitionSpec`` tree (pjit in_shardings)
+* ``init_tree``    -> real arrays (smoke tests / examples, small configs only)
+
+This is what lets us "hold" a 671B-parameter model on a CPU-only container:
+the full configs are only ever lowered from structs, never materialised.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+DType = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative description of one parameter tensor."""
+
+    shape: tuple[int, ...]
+    dtype: DType = jnp.bfloat16
+    # Logical sharding axes, one entry per dim. Each entry is an axis-name
+    # string ("model", "data", "expert", ...), a tuple of axis names, or None.
+    # These are *logical* names resolved against the mesh by nn.sharding.
+    axes: tuple[Any, ...] = ()
+    init: str = "normal"  # normal | zeros | ones | scaled | uniform
+    scale: float | None = None  # stddev override for "normal"/"scaled"
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank mismatch with shape {self.shape}"
+            )
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    def with_stacked(self, n: int) -> "ParamSpec":
+        """Prepend a stacking (scan-over-layers) dimension."""
+        return dataclasses.replace(
+            self,
+            shape=(n, *self.shape),
+            axes=(None, *self.axes) if self.axes else (),
+        )
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def param_count(tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_spec):
+        total += leaf.size
+    return total
+
+
+def param_bytes(tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree, is_leaf=is_spec):
+        total += leaf.size * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def struct_tree(tree, mesh: Mesh | None = None, resolve=None):
+    """ShapeDtypeStruct tree, optionally with NamedSharding attached."""
+
+    def mk(spec: ParamSpec):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(spec.shape, spec.dtype)
+        pspec = resolve(spec) if resolve is not None else P()
+        return jax.ShapeDtypeStruct(
+            spec.shape, spec.dtype, sharding=NamedSharding(mesh, pspec)
+        )
+
+    return tree_map_specs(mk, tree)
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    if len(shape) == 0:
+        return 1
+    if len(shape) == 1:
+        return shape[0]
+    # weight matrices are (in, out) by convention here; stacked dims excluded
+    return shape[-2]
+
+
+def init_leaf(key, spec: ParamSpec):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "uniform":
+        lim = spec.scale or 0.01
+        return jax.random.uniform(
+            key, spec.shape, jnp.float32, minval=-lim, maxval=lim
+        ).astype(spec.dtype)
+    if spec.init in ("normal", "scaled"):
+        std = spec.scale
+        if std is None:
+            std = 1.0 / math.sqrt(max(_fan_in(spec.shape), 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(
+            spec.dtype
+        )
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_tree(key, tree):
+    """Materialise real parameters from a spec tree (small configs only)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def stack_tree(tree, n: int):
+    """Stack a per-layer spec tree n times for lax.scan consumption."""
+    return tree_map_specs(lambda s: s.with_stacked(n), tree)

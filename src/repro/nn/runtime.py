@@ -1,0 +1,12 @@
+"""Process-wide lowering knobs (set by launch.dryrun, default-safe)."""
+
+# Unroll factor applied to every structural lax.scan (superblocks, attention
+# chunk loops, mamba/mlstm time-chunk loops). 1 = rolled while-loops (small
+# HLO, fast compile). The dry-run metric compiles set this large because XLA
+# cost_analysis counts a while body ONCE, not ×trip_count — metrics are only
+# exact when the hot-path loops are fully unrolled.
+UNROLL = 1
+
+
+def unroll_for(n: int) -> int:
+    return max(1, min(UNROLL, n))

@@ -1,0 +1,121 @@
+"""Chunked-vocab fused cross-entropy (custom_vjp).
+
+For big-vocab LMs (gemma3: 262k, qwen: 152k) materialising the (tokens ×
+vocab) f32 logits costs gigabytes of activation memory per step. This op
+fuses unembedding + log-softmax + NLL with an online logsumexp over vocab
+chunks, so only a (tokens × chunk) tile is ever live; the backward pass
+recomputes each chunk's logits and emits (softmax − onehot) gradients
+chunk-wise (the standard production-framework "fused vocab loss").
+
+Used on the FSDP-only (no-TP) parallelism plan and the 1-device test mesh;
+the vocab-sharded Megatron path (models.lm._sharded_xent) covers TP runs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import runtime
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def chunked_xent(x, table, labels, chunk: int = 16384, softcap: float = 0.0):
+    loss, _ = _fwd(x, table, labels, chunk, softcap)
+    return loss
+
+
+def _logits_chunk(x, w_c, softcap):
+    lg = jnp.einsum(
+        "td,vd->tv", x, w_c, preferred_element_type=jnp.float32
+    )
+    if softcap:
+        lg = jnp.tanh(lg / softcap) * softcap
+    return lg
+
+
+def _nchunks(v: int, chunk_req: int) -> int:
+    """Smallest chunk count k ≥ v/chunk_req with v % k == 0 (chunks must
+    tile the vocab exactly so backward dW rows stay disjoint)."""
+    k = max(1, -(-v // chunk_req))
+    while v % k:
+        k += 1
+    return k
+
+
+def _fwd(x, table, labels, chunk, softcap):
+    t, d = x.shape
+    v = table.shape[0]
+    nchunks = _nchunks(v, chunk)
+    chunk = v // nchunks
+
+    def body(carry, ci):
+        m, l, picked = carry
+        w_c = jax.lax.dynamic_slice_in_dim(
+            table, ci * chunk, chunk, axis=0
+        )
+        lg = _logits_chunk(x, w_c, softcap)  # (T, C)
+        vid = ci * chunk + jnp.arange(chunk)
+        m_new = jnp.maximum(m, jnp.max(lg, axis=1))
+        l = l * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(lg - m_new[:, None]), axis=1
+        )
+        loc = labels - ci * chunk
+        ok = (loc >= 0) & (loc < chunk)
+        got = jnp.take_along_axis(
+            lg, jnp.clip(loc, 0, chunk - 1)[:, None], axis=1
+        )[:, 0]
+        picked = jnp.where(ok, got, picked)
+        return (m_new, l, picked), None
+
+    m0 = jnp.full((t,), -1e30, jnp.float32)
+    l0 = jnp.zeros((t,), jnp.float32)
+    p0 = jnp.zeros((t,), jnp.float32)
+    (m, l, picked), _ = jax.lax.scan(
+        body, (m0, l0, p0), jnp.arange(nchunks),
+        unroll=runtime.unroll_for(nchunks),
+    )
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    loss = jnp.mean(lse - picked)
+    return loss, (x, table, labels, lse)
+
+
+def _bwd(chunk, softcap, res, ct):
+    x, table, labels, lse = res
+    t, d = x.shape
+    v = table.shape[0]
+    nchunks = _nchunks(v, chunk)
+    chunk = v // nchunks
+    scale = ct / t
+
+    def body(dx, ci):
+        w_c = jax.lax.dynamic_slice_in_dim(table, ci * chunk, chunk, axis=0)
+        lg = _logits_chunk(x, w_c, softcap)
+        vid = ci * chunk + jnp.arange(chunk)
+        p = jnp.exp(lg - lse[:, None])  # softmax chunk
+        onehot = (labels[:, None] == vid[None, :]).astype(jnp.float32)
+        g = (p - onehot) * scale  # (T, C) dL/dlogits
+        if softcap:
+            # d tanh(z/c)*c = sech^2 = 1 - (lg/c)^2 on the capped value
+            g = g * (1.0 - (lg / softcap) ** 2)
+        dx = dx + jnp.einsum("tv,vd->td", g.astype(w_c.dtype), w_c,
+                             preferred_element_type=jnp.float32)
+        dw_c = jnp.einsum("tv,td->vd", g.astype(x.dtype), x,
+                          preferred_element_type=jnp.float32)
+        return dx, dw_c
+
+    dx0 = jnp.zeros((t, d), jnp.float32)
+    dx, dw_chunks = jax.lax.scan(
+        body, dx0, jnp.arange(nchunks), unroll=runtime.unroll_for(nchunks)
+    )
+    dw = dw_chunks.reshape(v, d)
+    return dx.astype(x.dtype), dw.astype(table.dtype), None
+
+
+chunked_xent.defvjp(
+    lambda x, table, labels, chunk, softcap: _fwd(
+        x, table, labels, chunk, softcap
+    ),
+    _bwd,
+)

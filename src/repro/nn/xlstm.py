@@ -1,0 +1,278 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly sequential scan) — arXiv:2405.04517.
+
+mLSTM keeps a matrix memory C (B,H,dk,dv) with exponential input/forget
+gates and a normaliser state; training uses a chunkwise formulation
+(intra-chunk attention-like term + inter-chunk recurrent carry), which is
+the TPU-friendly re-expression of the paper's parallel form. sLSTM is a
+sequential ``lax.scan`` — the paper itself notes it is not parallelisable;
+its state is O(d) so the scan body is tiny.
+
+Decode: O(1) recurrent updates for both (the long_500k story for xlstm).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.config import XLSTMConfig
+from repro.nn.param import ParamSpec
+from repro.nn.sharding import ShardCtx
+
+
+# ================================================================= mLSTM
+
+
+def mlstm_specs(cfg: XLSTMConfig, d_model: int, dtype) -> dict:
+    h = cfg.n_heads
+    d_in = int(cfg.proj_factor * d_model)
+    dh = d_in // h
+    return {
+        "w_up": ParamSpec((d_model, 2 * d_in), dtype, ("fsdp", "model")),
+        "w_q": ParamSpec((d_in, d_in), dtype, ("fsdp", "model")),
+        "w_k": ParamSpec((d_in, d_in), dtype, ("fsdp", "model")),
+        "w_v": ParamSpec((d_in, d_in), dtype, ("fsdp", "model")),
+        "w_if": ParamSpec((d_in, 2 * h), jnp.float32, (None, None), scale=0.02),
+        "b_if": ParamSpec((2 * h,), jnp.float32, (None,), init="zeros"),
+        "gn_scale": ParamSpec((d_in,), jnp.float32, ("model",), init="ones"),
+        "w_down": ParamSpec((d_in, d_model), dtype, ("model", "fsdp")),
+    }
+
+
+def _headwise_norm(x, scale, eps=1e-6):
+    # x: (B, S, H, Dh) — GroupNorm per head as in the paper
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    b, s, h, dh = x.shape
+    return (out.reshape(b, s, h * dh) * scale).reshape(b, s, h, dh)
+
+
+def mlstm_apply(
+    ctx: ShardCtx,
+    p,
+    cfg: XLSTMConfig,
+    x,
+    cache: Optional[dict] = None,
+):
+    """x: (B,S,D) -> (y, cache). cache = {c (B,H,dk,dv), n (B,H,dk), m (B,H)}."""
+    b, s, d_model = x.shape
+    h = cfg.n_heads
+    d_in = int(cfg.proj_factor * d_model)
+    dh = d_in // h
+
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    up = ctx.constrain(up, "dp", None, "model")
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ef->bsf", xi, p["w_q"]).reshape(b, s, h, dh)
+    k = jnp.einsum("bse,ef->bsf", xi, p["w_k"]).reshape(b, s, h, dh)
+    v = jnp.einsum("bse,ef->bsf", xi, p["w_v"]).reshape(b, s, h, dh)
+    k = k / jnp.sqrt(jnp.float32(dh)).astype(k.dtype)
+    gates = (
+        jnp.einsum("bse,ef->bsf", xi.astype(jnp.float32), p["w_if"]) + p["b_if"]
+    )  # (B,S,2H)
+    i_pre, f_pre = gates[..., :h], gates[..., h:]  # log-space gates
+    logf = jax.nn.log_sigmoid(f_pre)
+
+    if cache is None and s > 1:
+        y = _mlstm_chunked(cfg, q, k, v, i_pre, logf)
+        new_cache = _mlstm_final_state(cfg, k, v, i_pre, logf)
+    else:
+        c_prev = (
+            cache["c"] if cache is not None
+            else jnp.zeros((b, h, dh, dh), jnp.float32)
+        )
+        n_prev = (
+            cache["n"] if cache is not None else jnp.zeros((b, h, dh), jnp.float32)
+        )
+        m_prev = (
+            cache["m"] if cache is not None
+            else jnp.full((b, h), -1e30, jnp.float32)
+        )
+        i1, f1 = i_pre[:, 0], logf[:, 0]  # (B,H)
+        m = jnp.maximum(f1 + m_prev, i1)
+        fi = jnp.exp(f1 + m_prev - m)
+        ii = jnp.exp(i1 - m)
+        kf = k[:, 0].astype(jnp.float32)
+        vf = v[:, 0].astype(jnp.float32)
+        c = fi[..., None, None] * c_prev + ii[..., None, None] * (
+            kf[..., :, None] * vf[..., None, :]
+        )
+        n = fi[..., None] * n_prev + ii[..., None] * kf
+        qf = q[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhd,bhdv->bhv", qf, c)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n))
+        yt = num / jnp.maximum(den, jnp.exp(-m))[..., None]
+        y = yt[:, None].astype(x.dtype).reshape(b, 1, h, dh)
+        new_cache = {"c": c, "n": n, "m": m}
+
+    y = _headwise_norm(y, p["gn_scale"]).astype(x.dtype)
+    y = y.reshape(b, s, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"])
+    return ctx.constrain(out, "dp", None, None), new_cache
+
+
+def _mlstm_chunked(cfg, q, k, v, i_pre, logf):
+    """Chunkwise-parallel mLSTM (stabilised linear-attention form)."""
+    b, s, h, dh = q.shape
+    cs = min(cfg.chunk, s)
+    assert s % cs == 0, f"seq {s} must divide chunk {cs}"
+    nc = s // cs
+
+    def reshape_c(t):
+        return t.reshape(b, nc, cs, *t.shape[2:])
+
+    qc, kc, vc = map(reshape_c, (q, k, v))
+    ic = i_pre.reshape(b, nc, cs, h)
+    fc = logf.reshape(b, nc, cs, h)
+
+    def chunk(carry, xs):
+        c_prev, n_prev, m_prev = carry  # (B,H,dk,dv), (B,H,dk), (B,H)
+        qb, kb, vb, ib, fb = xs  # (B,cs,...)
+        fcum = jnp.cumsum(fb, axis=1)  # (B,cs,H) inclusive log-forget
+        ftot = fcum[:, -1]  # (B,H)
+        # log weight of state contributions at each t
+        lam = fcum + m_prev[:, None, :]  # contribution of carry at step t
+        # intra-chunk pairwise: D[t,t'] = sum_{j>t'} f_j + i_{t'} for t'<=t
+        dmat = (
+            fcum[:, :, None, :] - fcum[:, None, :, :] + ib[:, None, :, :]
+        )  # (B,t,t',H)
+        tri = jnp.tril(jnp.ones((cs, cs), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+        m_intra = jnp.max(dmat, axis=2)  # (B,t,H)
+        m_t = jnp.maximum(lam, m_intra)  # running stabiliser per step
+        # carry term
+        qf = qb.astype(jnp.float32)
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        w_carry = jnp.exp(lam - m_t)  # (B,t,H)
+        num_carry = jnp.einsum("bthd,bhdv->bthv", qf, c_prev) * w_carry[..., None]
+        den_carry = jnp.einsum("bthd,bhd->bth", qf, n_prev) * w_carry
+        # intra term
+        wmat = jnp.exp(dmat - m_t[:, :, None, :])  # (B,t,t',H)
+        scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * wmat
+        num_intra = jnp.einsum("btsh,bshv->bthv", scores, vf)
+        den_intra = jnp.sum(scores, axis=2)
+        num = num_carry + num_intra
+        den = den_carry + den_intra
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- update carry to end of chunk
+        m_new = jnp.maximum(ftot + m_prev, jnp.max(ib + (ftot[:, None] - fcum), axis=1))
+        wi = jnp.exp(ib + (ftot[:, None] - fcum) - m_new[:, None])  # (B,t,H)
+        c_new = jnp.exp(ftot + m_prev - m_new)[:, :, None, None] * c_prev + \
+            jnp.einsum("bthd,bth,bthv->bhdv", kf, wi, vf)
+        n_new = jnp.exp(ftot + m_prev - m_new)[..., None] * n_prev + \
+            jnp.einsum("bthd,bth->bhd", kf, wi)
+        return (c_new, n_new, m_new), y
+
+    c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), 0.0, jnp.float32)
+    xs = (
+        jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(ic, 1, 0), jnp.moveaxis(fc, 1, 0),
+    )
+    _, ys = jax.lax.scan(chunk, (c0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dh)
+    return y
+
+
+def _mlstm_final_state(cfg, k, v, i_pre, logf):
+    """Final (c, n, m) after a full prefill — for decode continuation."""
+    b, s, h, dh = k.shape
+    fcum = jnp.cumsum(logf, axis=1)
+    ftot = fcum[:, -1]  # (B,H)
+    w_log = i_pre + (ftot[:, None] - fcum)  # (B,S,H)
+    m = jnp.max(w_log, axis=1)  # (B,H)
+    wi = jnp.exp(w_log - m[:, None])
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    c = jnp.einsum("bshd,bsh,bshv->bhdv", kf, wi, vf)
+    n = jnp.einsum("bshd,bsh->bhd", kf, wi)
+    return {"c": c, "n": n, "m": m}
+
+
+def mlstm_cache_specs(cfg: XLSTMConfig, d_model: int, batch: int) -> dict:
+    h = cfg.n_heads
+    d_in = int(cfg.proj_factor * d_model)
+    dh = d_in // h
+    return {
+        "c": ParamSpec((batch, h, dh, dh), jnp.float32, ("dp", None, None, None), init="zeros"),
+        "n": ParamSpec((batch, h, dh), jnp.float32, ("dp", None, None), init="zeros"),
+        "m": ParamSpec((batch, h), jnp.float32, ("dp", None), init="zeros"),
+    }
+
+
+# ================================================================= sLSTM
+
+
+def slstm_specs(cfg: XLSTMConfig, d_model: int, dtype) -> dict:
+    h = cfg.n_heads
+    dh = d_model // h
+    # 4 gates (i, f, z, o), input + recurrent weights (block-diag per head)
+    return {
+        "w_gates": ParamSpec((d_model, 4 * d_model), dtype, ("fsdp", "model")),
+        "r_gates": ParamSpec((h, dh, 4 * dh), jnp.float32, (None, None, None)),
+        "b_gates": ParamSpec((4 * d_model,), jnp.float32, ("model",), init="zeros"),
+        "gn_scale": ParamSpec((d_model,), jnp.float32, ("model",), init="ones"),
+        "w_down": ParamSpec((d_model, d_model), dtype, ("model", "fsdp")),
+    }
+
+
+def slstm_apply(
+    ctx: ShardCtx,
+    p,
+    cfg: XLSTMConfig,
+    x,
+    cache: Optional[dict] = None,
+):
+    """x: (B,S,D). cache = {h, c, n, m} each (B,H,Dh). Sequential scan."""
+    b, s, d_model = x.shape
+    nh = cfg.n_heads
+    dh = d_model // nh
+
+    wx = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), p["w_gates"].astype(jnp.float32))
+    wx = wx + p["b_gates"]
+    wx = wx.reshape(b, s, nh, 4 * dh)
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((b, nh, dh), jnp.float32)
+    c0 = cache["c"] if cache is not None else jnp.zeros((b, nh, dh), jnp.float32)
+    n0 = cache["n"] if cache is not None else jnp.ones((b, nh, dh), jnp.float32)
+    m0 = cache["m"] if cache is not None else jnp.zeros((b, nh, dh), jnp.float32)
+
+    r = p["r_gates"]  # (H, Dh, 4Dh)
+
+    def step(carry, wx_t):
+        h_prev, c_prev, n_prev, m_prev = carry
+        g = wx_t + jnp.einsum("bhd,hdg->bhg", h_prev, r)  # (B,H,4Dh)
+        i_pre, f_pre, z_pre, o_pre = jnp.split(g, 4, axis=-1)
+        m_t = jnp.maximum(f_pre + m_prev, i_pre)
+        i_g = jnp.exp(i_pre - m_t)
+        f_g = jnp.exp(f_pre + m_prev - m_t)
+        z_g = jnp.tanh(z_pre)
+        o_g = jax.nn.sigmoid(o_pre)
+        c_t = f_g * c_prev + i_g * z_g
+        n_t = f_g * n_prev + i_g
+        h_t = o_g * c_t / jnp.maximum(n_t, 1e-6)
+        return (h_t, c_t, n_t, m_t), h_t
+
+    (hf, cf, nf, mf), ys = jax.lax.scan(
+        step, (h0, c0, n0, m0), jnp.moveaxis(wx, 1, 0)
+    )
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,H,Dh)
+    y = _headwise_norm(y, p["gn_scale"]).astype(x.dtype).reshape(b, s, d_model)
+    out = jnp.einsum("bsd,de->bse", y, p["w_down"])
+    new_cache = {"h": hf, "c": cf, "n": nf, "m": mf}
+    return ctx.constrain(out, "dp", None, None), new_cache
+
+
+def slstm_cache_specs(cfg: XLSTMConfig, d_model: int, batch: int) -> dict:
+    nh = cfg.n_heads
+    dh = d_model // nh
+    mk = lambda init: ParamSpec(
+        (batch, nh, dh), jnp.float32, ("dp", None, None), init=init
+    )
+    return {"h": mk("zeros"), "c": mk("zeros"), "n": mk("ones"), "m": mk("zeros")}

@@ -1,0 +1,507 @@
+"""Virtual-time discrete-event serving engine.
+
+Reproduces the paper's end-to-end pipeline (Fig 4/6): agent think rounds on
+the accelerator, tool calls intercepted by the data client, two-stage cache
+lookups with the judge as a *deferrable* accelerator job (timeout ⇒ treated
+as a miss — the paper's degradation-not-blocking property), remote fetches
+through the rate-limited WAN service, LCFU admission/eviction, Markov
+prefetching, and periodic threshold recalibration.
+
+Modes: "vanilla" (no cache), "exact" (exact-match KV cache),
+"cortex" (full), "cortex-nojudge" (ANN-only ablation, Fig 13).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.cache import CortexCache
+from repro.core.prefetch import MarkovPrefetcher
+from repro.core.recalibrate import EvalRecord, recalibrate
+from repro.data.workloads import Request
+from repro.data.world import SemanticWorld
+from repro.serving.gpu import GPU, GPUConfig
+from repro.serving.remote import RemoteDataService
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    think_tokens: float = 160.0
+    answer_tokens: float = 160.0
+    judge_tokens: float = 24.0          # prefill-only classification job
+    t_cache_cpu: float = 0.02           # embed + ANN (paper Fig 11)
+    judge_timeout: float = 0.25         # deferred validation ⇒ miss
+    closed_loop: Optional[int] = None   # concurrency, or None = open loop
+    prefetch: bool = True
+    prefetch_confidence: float = 0.55
+    prefetch_min_headroom: float = 0.2
+    recalibrate_every: Optional[float] = None  # seconds; None = off
+    recal_samples: int = 5
+    p_target: float = 0.99
+    em_p_base: float = 0.79             # EM | correct info (per dataset)
+    em_p_wrong: float = 0.10            # EM | wrong cached info
+    gpu_cost_per_hour: float = 1.49     # Table 5
+    warmup_frac: float = 0.0            # exclude first fraction from stats
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    arrival: float
+    t_done: float = 0.0
+    latency: float = 0.0
+    agent_time: float = 0.0
+    cache_time: float = 0.0
+    remote_time: float = 0.0
+    rounds: int = 0
+    cache_hits: int = 0
+    remote_calls: int = 0
+    info_correct: bool = True
+    em_correct: bool = False
+
+
+@dataclasses.dataclass
+class _ReqState:
+    req: Request
+    rec: RequestRecord
+    round: int = 0
+    round_t0: float = 0.0
+    judge_done: bool = False
+    judge_timed_out: bool = False
+    info_values: list = dataclasses.field(default_factory=list)
+
+
+class ExactCache:
+    """Exact-key baseline (Agent_exact): byte-identical query match, LRU."""
+
+    def __init__(self, capacity_bytes: int, max_ttl: float = 3600.0):
+        self.capacity = capacity_bytes
+        self.max_ttl = max_ttl
+        self.d: dict[str, tuple[Any, float, int]] = {}  # val, expires, size
+        self.order: list[str] = []
+        self.usage = 0
+        self.hits = 0
+        self.lookups = 0
+
+    def lookup(self, query: str, now: float):
+        self.lookups += 1
+        ent = self.d.get(query)
+        if ent and now < ent[1]:
+            self.hits += 1
+            self.order.remove(query)
+            self.order.append(query)
+            return ent[0]
+        return None
+
+    def insert(self, query: str, value, size: int, now: float):
+        if query in self.d:
+            return
+        while self.usage + size > self.capacity and self.order:
+            victim = self.order.pop(0)
+            self.usage -= self.d.pop(victim)[2]
+        self.d[query] = (value, now + self.max_ttl, size)
+        self.order.append(query)
+        self.usage += size
+
+    @property
+    def hit_rate(self):
+        return self.hits / self.lookups if self.lookups else 0.0
+
+
+class Engine:
+    def __init__(
+        self,
+        *,
+        world: SemanticWorld,
+        requests: list[Request],
+        mode: str = "cortex",
+        cache: Optional[CortexCache] = None,
+        exact: Optional[ExactCache] = None,
+        remote: Optional[RemoteDataService] = None,
+        gpu: Optional[GPU] = None,
+        cfg: Optional[EngineConfig] = None,
+    ):
+        self.world = world
+        self.requests = requests
+        self.mode = mode
+        self.cache = cache
+        self.exact = exact
+        self.remote = remote or RemoteDataService()
+        self.gpu = gpu or GPU(GPUConfig())
+        self.cfg = cfg or EngineConfig()
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self.prefetcher = MarkovPrefetcher(
+            confidence=self.cfg.prefetch_confidence
+        )
+        self.records: list[RequestRecord] = []
+        self.eval_log: list[EvalRecord] = []
+        self.recal_history: list[tuple[float, float]] = []
+        self.recal_cost = 0.0
+        self._events: list = []
+        self._seq = itertools.count()
+        self._now = 0.0
+        self._pending = list(requests)
+        self._active = 0
+        self._judge_backlog: list[tuple] = []
+        self._done = 0
+        self._warm_cut = int(len(requests) * self.cfg.warmup_frac)
+        self._warm_snap = None
+
+    # ------------------------------------------------------------ events
+
+    def _push(self, t: float, fn, *args):
+        heapq.heappush(self._events, (t, next(self._seq), fn, args))
+
+    def _push_lane_event(self, lane):
+        nxt = lane.next_completion()
+        if nxt is not None:
+            ver = lane.version
+            self._push(nxt, self._lane_tick, lane, ver)
+
+    def _lane_tick(self, lane, ver):
+        if ver != lane.version:
+            return  # stale
+        done = lane.complete_due(self._now)
+        for job in done:
+            job.callback(self._now)
+        self._push_lane_event(lane)
+        self._dispatch_judges()
+        if self.gpu.rebalance(self._now):
+            self._push_lane_event(self.gpu.agent)
+
+    def _submit(self, lane, tokens, cb):
+        lane.submit(self._now, tokens, cb)
+        if self.gpu.rebalance(self._now):
+            self._push_lane_event(self.gpu.agent)
+        self._push_lane_event(lane)
+
+    # ------------------------------------------------------------ fsm
+
+    def _start_request(self, req: Request):
+        rec = RequestRecord(rid=req.rid, arrival=req.arrival)
+        st = _ReqState(req=req, rec=rec)
+        self._active += 1
+        self._begin_round(st)
+
+    def _begin_round(self, st: _ReqState):
+        st.round_t0 = self._now
+        t0 = self._now
+
+        def think_done(now):
+            st.rec.agent_time += now - t0
+            self._tool_call(st)
+
+        self._submit(self.gpu.agent, self.cfg.think_tokens, think_done)
+
+    def _tool_call(self, st: _ReqState):
+        q = st.req.query_for_round(st.round)
+        if self.mode == "vanilla" or (
+            self.mode == "exact" and self.exact is None
+        ):
+            self._go_remote(st)
+            return
+        if self.mode == "exact":
+            val = self.exact.lookup(q, self._now)
+            if val is not None:
+                self._observe(st, val, from_cache=True)
+            else:
+                self._go_remote(st)
+            return
+        # cortex / cortex-nojudge: embed+ANN on host, then judge on chip
+        t0 = self._now
+
+        def stage1_done(now):
+            st.rec.cache_time += now - t0
+            q_emb = self.world.embed(q)
+            cands = self.cache.stage1(q, q_emb, now)
+            if not cands:
+                self.cache.miss_no_candidates()
+                self._go_remote(st)
+                return
+            if self.mode == "cortex-nojudge":
+                # ANN-only ablation: accept nearest candidate blindly
+                se = cands[0]
+                se.freq += 1
+                se.last_access = now
+                self.cache.stats.hits += 1
+                st.rec.cache_hits += 1
+                self._after_validated(st, se.key)
+                self._observe(st, se.value, from_cache=True)
+                return
+            self._judge_request(st, q, cands)
+
+        self._push(self._now + self.cfg.t_cache_cpu, stage1_done)
+
+    def _judge_request(self, st: _ReqState, q: str, cands):
+        st.judge_done = False
+        st.judge_timed_out = False
+        t0 = self._now
+
+        def judge_done(now):
+            if st.judge_timed_out:
+                return  # request already proceeded as a miss
+            st.judge_done = True
+            st.rec.cache_time += now - t0
+            scores = self.cache.seri.judge.score_pairs(
+                [q] * len(cands), [c.key for c in cands]
+            )
+            for c, s in zip(cands, scores):
+                self.eval_log.append(EvalRecord(q, c.key, c.value, float(s)))
+            res = self.cache.finalize(q, cands, scores, now)
+            if res.hit:
+                st.rec.cache_hits += 1
+                self._after_validated(st, res.se.key)
+                self._observe(st, res.se.value, from_cache=True)
+            else:
+                self._go_remote(st)
+
+        def judge_timeout(now):
+            if st.judge_done:
+                return
+            st.judge_timed_out = True
+            self.cache.stats.misses += 1
+            self._go_remote(st)  # deferred validation = miss (§4.4)
+
+        self._judge_backlog.append((self.cfg.judge_tokens, judge_done))
+        self._push(self._now + self.cfg.judge_timeout, judge_timeout)
+        self._dispatch_judges()
+
+    def _dispatch_judges(self):
+        while self._judge_backlog and self.gpu.judge_admission_ok() and \
+                self.gpu.judge.n_waiting == 0:
+            tokens, cb = self._judge_backlog.pop(0)
+            self._submit(self.gpu.judge, tokens, cb)
+
+    def _go_remote(self, st: _ReqState):
+        q = st.req.query_for_round(st.round)
+        out = self.remote.fetch(
+            self._now,
+            latency_mult=self.world.latency_mult(q),
+            cost_mult=self.world.cost_mult(q),
+        )
+        st.rec.remote_calls += 1
+        t0 = self._now
+
+        def fetched(now):
+            st.rec.remote_time += now - t0
+            value = self.world.fetch(q)
+            size = self.world.value_size(q)
+            if self.mode in ("cortex", "cortex-nojudge") and self.cache is not None:
+                q_emb = self.world.embed(q)
+                self.cache.insert(
+                    q, q_emb, value, now=now, cost=out.cost,
+                    latency=now - t0, size=size,
+                    intent=self.world.intent_of(q),
+                )
+                self._after_validated(st, q)
+            elif self.mode == "exact" and self.exact is not None:
+                self.exact.insert(q, value, size, now)
+            self._observe(st, value, from_cache=False)
+
+        self._push(out.finish, fetched)
+
+    def _after_validated(self, st: _ReqState, key: str):
+        """Feed the prefetcher with the validated intent stream."""
+        if not self.cfg.prefetch or self.mode != "cortex":
+            return
+        intent = self.world.intent_of(key)
+        self.prefetcher.observe(intent)
+        pred = self.prefetcher.predict(intent)
+        if pred is None:
+            return
+        pq = self.world.query(int(pred.state), 0)
+        pq_emb = self.world.embed(pq)
+        if self.cache.contains_semantic(pq, pq_emb, self._now):
+            return
+        if self.remote.headroom(self._now) < self.cfg.prefetch_min_headroom:
+            return
+        out = self.remote.fetch(
+            self._now,
+            latency_mult=self.world.latency_mult(pq),
+            cost_mult=self.world.cost_mult(pq),
+        )
+        t0 = self._now
+
+        def prefetched(now):
+            self.cache.insert(
+                pq, pq_emb, self.world.fetch(pq), now=now, cost=out.cost,
+                latency=now - t0, size=self.world.value_size(pq),
+                prefetched=True, intent=int(pred.state),
+            )
+
+        self._push(out.finish, prefetched)
+
+    def _observe(self, st: _ReqState, value, *, from_cache: bool):
+        q_round = st.req.query_for_round(st.round)
+        correct = self.world.equivalent(value, self.world.answer(q_round))
+        st.info_values.append(correct)
+        st.round += 1
+        st.rec.rounds += 1
+        if st.round < st.req.n_rounds:
+            self._begin_round(st)
+        else:
+            t0 = self._now
+
+            def answered(now):
+                st.rec.agent_time += now - t0
+                self._complete(st)
+
+            self._submit(self.gpu.agent, self.cfg.answer_tokens, answered)
+
+    def _complete(self, st: _ReqState):
+        rec = st.rec
+        rec.t_done = self._now
+        rec.latency = self._now - rec.arrival if self.cfg.closed_loop is None \
+            else self._now - rec.arrival  # arrival set at dispatch for CL
+        rec.info_correct = all(st.info_values)
+        p = self.cfg.em_p_base if rec.info_correct else self.cfg.em_p_wrong
+        rec.em_correct = bool(self.rng.random() < p)
+        self.records.append(rec)
+        self._active -= 1
+        self._done += 1
+        if self._done == self._warm_cut and self._warm_snap is None:
+            import copy as _copy
+            self._warm_snap = {
+                "n_records": len(self.records),
+                "remote_calls": self.remote.calls,
+                "remote_attempts": self.remote.attempts,
+                "remote_retries": self.remote.retries,
+                "remote_cost": self.remote.total_cost,
+                "t": self._now,
+                "cache": _copy.copy(self.cache.stats) if self.cache else None,
+                "exact": (self.exact.hits, self.exact.lookups)
+                if self.exact else None,
+            }
+        if self.cfg.closed_loop is not None:
+            self._dispatch_closed_loop()
+
+    # --------------------------------------------------------- recal
+
+    def _recal_tick(self):
+        if self.eval_log:
+            n = min(self.cfg.recal_samples, len(self.eval_log))
+            cost_calls = n
+
+            def fetch_gt(q):
+                self.recal_cost += self.remote.cost_per_call
+                self.remote.calls += 1
+                self.remote.total_cost += self.remote.cost_per_call
+                return self.world.fetch(q)
+
+            res = recalibrate(
+                self.eval_log[-512:], fetch_gt, self.world.equivalent,
+                p_target=self.cfg.p_target, sample_size=n,
+                rng=self.rng,
+            )
+            self.cache.seri.tau_lsm = res.tau
+            self.recal_history.append((self._now, res.tau))
+        self._push(self._now + self.cfg.recalibrate_every, lambda now=None: self._recal_tick())
+
+    # --------------------------------------------------------- run
+
+    def _dispatch_closed_loop(self):
+        n = self.cfg.closed_loop
+        while self._pending and self._active < n:
+            req = self._pending.pop(0)
+            req = dataclasses.replace(req, arrival=self._now)
+            self._start_request(req)
+
+    def run(self) -> dict:
+        if self.cfg.closed_loop is not None:
+            self._dispatch_closed_loop()
+        else:
+            for req in self._pending:
+                self._push(req.arrival, lambda now=None, r=req: self._start_request(r))
+            self._pending = []
+        if self.cfg.recalibrate_every and self.mode == "cortex":
+            self._push(self.cfg.recalibrate_every, lambda now=None: self._recal_tick())
+
+        while self._events and self._done < len(self.requests):
+            t, _, fn, args = heapq.heappop(self._events)
+            self._now = max(self._now, t)
+            fn(*args) if args else fn(self._now)
+        return self.summary()
+
+    # --------------------------------------------------------- metrics
+
+    def summary(self) -> dict:
+        snap = self._warm_snap
+        recs = self.records[snap["n_records"]:] if snap else self.records
+        if not recs:
+            return {}
+        t_end = max(r.t_done for r in recs)
+        t_start = snap["t"] if snap else min(r.arrival for r in recs)
+        makespan = max(t_end - t_start, 1e-9)
+        lat = np.array([r.latency for r in recs])
+        gpu_hours = makespan / 3600 * self.gpu.n_chips
+        d_calls = self.remote.calls - (snap["remote_calls"] if snap else 0)
+        d_attempts = self.remote.attempts - (
+            snap["remote_attempts"] if snap else 0
+        )
+        d_retries = self.remote.retries - (
+            snap["remote_retries"] if snap else 0
+        )
+        d_cost = self.remote.total_cost - (
+            snap["remote_cost"] if snap else 0.0
+        )
+        out = {
+            "mode": self.mode,
+            "n": len(recs),
+            "throughput_rps": len(recs) / makespan,
+            "latency_mean": float(lat.mean()),
+            "latency_p50": float(np.percentile(lat, 50)),
+            "latency_p99": float(np.percentile(lat, 99)),
+            "agent_time_mean": float(np.mean([r.agent_time for r in recs])),
+            "cache_time_mean": float(np.mean([r.cache_time for r in recs])),
+            "remote_time_mean": float(np.mean([r.remote_time for r in recs])),
+            "api_calls": d_calls,
+            "api_attempts": d_attempts,
+            "retry_ratio": d_retries / d_attempts if d_attempts else 0.0,
+            "api_cost": d_cost,
+            "gpu_cost": gpu_hours * self.cfg.gpu_cost_per_hour,
+            "em": float(np.mean([r.em_correct for r in recs])),
+            "info_accuracy": float(np.mean([r.info_correct for r in recs])),
+            "makespan": makespan,
+        }
+        # hit-path breakdown (all rounds served from cache): the paper's
+        # Fig 11 steady-state per-request latency decomposition
+        hit_recs = [r for r in recs if r.remote_calls == 0]
+        if hit_recs:
+            out["hitpath_latency"] = float(
+                np.mean([r.latency for r in hit_recs])
+            )
+            out["hitpath_agent"] = float(
+                np.mean([r.agent_time for r in hit_recs])
+            )
+            out["hitpath_cache"] = float(
+                np.mean([r.cache_time for r in hit_recs])
+            )
+        if self.mode in ("cortex", "cortex-nojudge") and self.cache is not None:
+            s = self.cache.stats
+            if snap and snap.get("cache") is not None:
+                c0 = snap["cache"]
+                lk = s.lookups - c0.lookups
+                ht = s.hits - c0.hits
+                out["hit_rate_steady"] = ht / lk if lk else 0.0
+            out.update(
+                hit_rate=s.hit_rate, evictions=s.evictions,
+                ttl_evictions=s.ttl_evictions,
+                prefetch_inserts=s.prefetch_inserts,
+                prefetch_hits=s.prefetch_hits,
+                judge_calls=s.judge_calls,
+                cache_items=len(self.cache),
+            )
+        elif self.mode == "exact" and self.exact is not None:
+            out.update(hit_rate=self.exact.hit_rate)
+        else:
+            out.update(hit_rate=0.0)
+        out["cost_total"] = out["api_cost"] + out["gpu_cost"]
+        out["thpt_per_dollar"] = out["throughput_rps"] / max(
+            out["cost_total"], 1e-9
+        )
+        return out

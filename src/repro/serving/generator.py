@@ -1,0 +1,135 @@
+"""Real (non-simulated) continuous-batching generation loop.
+
+This is the concrete JAX runtime behind the DES model: fixed decode slots
+with per-slot KV caches, jit-compiled batched decode step, prefill-on-admit,
+and the co-located judge actually executing between decode steps under the
+paper's priority rule (judge batches run only when no agent request is
+waiting for a slot). Runs real (reduced) models end-to-end on CPU; on TPU
+the same loop runs the full configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM
+from repro.nn.param import init_tree
+from repro.nn.sharding import ShardCtx
+
+
+@dataclasses.dataclass
+class GenRequest:
+    rid: int
+    prompt: np.ndarray          # (len,) int32
+    max_new: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching for a decoder-only LM."""
+
+    def __init__(self, cfg, params=None, *, slots: int = 4,
+                 max_len: int = 128, seed: int = 0,
+                 judge: Optional[Callable[[], None]] = None):
+        self.cfg = cfg
+        self.lm = LM(cfg)
+        self.ctx = ShardCtx(None)
+        self.slots = slots
+        self.max_len = max_len
+        self.judge = judge
+        self.params = params if params is not None else init_tree(
+            jax.random.PRNGKey(seed), self.lm.param_specs()
+        )
+        caches = init_tree(
+            jax.random.PRNGKey(1), self.lm.cache_specs(slots, max_len)
+        )
+        self.caches = jax.tree.map(jnp.zeros_like, caches)
+        self.pos = np.zeros(slots, np.int32)          # next write index
+        self.active: list[Optional[GenRequest]] = [None] * slots
+        self.queue: list[GenRequest] = []
+        self.judge_batches_run = 0
+        self.decode_steps = 0
+
+        def decode_step(params, tokens, caches, pos_vec):
+            # per-slot positions: embed with per-slot rope positions
+            positions = pos_vec[:, None]
+            logits, new_caches = self.lm.decode(
+                self.ctx, params, tokens, caches,
+                jnp.max(pos_vec), positions=positions,
+            )
+            next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+            return next_tok.astype(jnp.int32), new_caches
+
+        self._decode = jax.jit(decode_step)
+
+    # ---------------------------------------------------------- admit
+
+    def submit(self, req: GenRequest):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.active[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[s] = req
+                # sequential prefill through the decode path (teacher-forced)
+                for t, tok in enumerate(req.prompt):
+                    self._step_slot(s, int(tok), t)
+                self.pos[s] = len(req.prompt)
+
+    def _step_slot(self, s: int, token: int, t: int):
+        """Feed one prompt token into slot s's cache (prefill-by-decode)."""
+        toks = np.zeros((self.slots, 1), np.int32)
+        toks[s, 0] = token
+        pos_vec = self.pos.copy()
+        pos_vec[s] = t
+        _, self.caches = self._decode(
+            self.params, jnp.asarray(toks), self.caches,
+            jnp.asarray(pos_vec),
+        )
+
+    # ---------------------------------------------------------- run
+
+    def step(self):
+        """One scheduler tick: admit, batched decode, judge-if-idle."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if live:
+            toks = np.zeros((self.slots, 1), np.int32)
+            for s in live:
+                req = self.active[s]
+                toks[s, 0] = (
+                    req.out_tokens[-1] if req.out_tokens
+                    else int(req.prompt[-1])
+                )
+            nxt, self.caches = self._decode(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(self.pos),
+            )
+            nxt = np.asarray(nxt)
+            self.decode_steps += 1
+            for s in live:
+                req = self.active[s]
+                req.out_tokens.append(int(nxt[s]))
+                self.pos[s] += 1
+                if len(req.out_tokens) >= req.max_new or \
+                        self.pos[s] >= self.max_len - 1:
+                    req.done = True
+                    self.active[s] = None
+        # priority rule (paper §4.4): judge work only when no request is
+        # waiting for a slot
+        if self.judge is not None and not self.queue:
+            self.judge()
+            self.judge_batches_run += 1
+
+    def run(self, until_drained: bool = True, max_ticks: int = 10_000):
+        ticks = 0
+        while (self.queue or any(self.active)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return ticks

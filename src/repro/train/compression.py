@@ -1,0 +1,111 @@
+"""Gradient compression for slow inter-pod links.
+
+Two composable schemes (the standard distributed-optimization toolbox for
+1000-node DP over DCN-class links):
+
+* ``topk_ef``   — per-tensor top-k magnitude sparsification with error
+  feedback: the residual (dropped mass) is carried into the next step, so
+  the compressed SGD provably tracks the dense trajectory.
+* ``int8``      — per-block linear quantisation (absmax scales), 4x over
+  f32 / 2x over bf16 on the wire.
+
+Both operate on the *local* gradient before the DP all-reduce; tests check
+exact round-trip bounds and error-feedback convergence on a quadratic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- top-k EF
+
+
+def topk_compress(g: jax.Array, frac: float):
+    """Keep the top `frac` fraction of entries by magnitude.
+    Returns (values, flat_indices, shape)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    return kept, idx, g.shape
+
+
+def topk_decompress(vals, idx, shape, dtype):
+    flat = jnp.zeros(int(jnp.prod(jnp.array(shape))), dtype)
+    flat = flat.at[idx].set(vals.astype(dtype))
+    return flat.reshape(shape)
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_tree(grads, residuals, frac: float):
+    """Error-feedback top-k over a grad pytree.
+    Returns (compressed leaves, new residuals)."""
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        vals, idx, shape = topk_compress(corrected, frac)
+        dense = topk_decompress(vals, idx, shape, jnp.float32)
+        new_r = corrected - dense
+        return (vals, idx), new_r, dense
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    comp, new_r, dense = [], [], []
+    for g, r in zip(flat_g, flat_r):
+        c, nr, d = one(g, r)
+        comp.append(c)
+        new_r.append(nr)
+        dense.append(d.astype(g.dtype))
+    return (
+        comp,
+        jax.tree.unflatten(treedef, new_r),
+        jax.tree.unflatten(treedef, dense),
+    )
+
+
+# ------------------------------------------------------------- int8
+
+
+@dataclasses.dataclass
+class Quantized:
+    q: Any       # int8 values
+    scale: Any   # f32 per-block absmax scales
+    shape: tuple
+
+
+def int8_quantize(g: jax.Array, block: int = 256) -> Quantized:
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return Quantized(q=q, scale=scale[:, 0], shape=tuple(g.shape))
+
+
+def int8_dequantize(z: Quantized, dtype=jnp.float32) -> jax.Array:
+    flat = (z.q.astype(jnp.float32) * z.scale[:, None]).reshape(-1)
+    n = 1
+    for d in z.shape:
+        n *= d
+    return flat[:n].reshape(z.shape).astype(dtype)
+
+
+def wire_bytes_dense(tree) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def wire_bytes_int8(tree, block: int = 256) -> int:
+    total = 0
+    for l in jax.tree.leaves(tree):
+        nblk = -(-l.size // block)
+        total += l.size + nblk * 4
+    return total

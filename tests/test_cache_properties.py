@@ -1,0 +1,150 @@
+"""Hypothesis property tests on the Cortex cache invariants."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cache import make_cache
+from repro.core.judge import OracleJudge
+from repro.core.semantic_element import ttl_from_staticity
+from repro.data.world import SemanticWorld
+
+WORLD = SemanticWorld(n_intents=120, dim=48, seed=7)
+
+
+def fresh_cache(capacity=20_000, eviction="lcfu", tau_lsm=0.9, acc=1.0,
+                max_ttl=600.0):
+    judge = OracleJudge(WORLD, accuracy=acc, seed=1)
+    return make_cache(
+        capacity_bytes=capacity, dim=WORLD.dim, judge=judge,
+        eviction=eviction, max_ttl=max_ttl, index_capacity=256,
+    )
+
+
+ops = st.lists(
+    st.tuples(
+        st.integers(0, 119),       # intent
+        st.integers(0, 30),        # paraphrase
+        st.floats(0.0, 500.0),     # time offset
+    ),
+    min_size=1, max_size=60,
+)
+
+
+@given(ops)
+@settings(max_examples=40, deadline=None)
+def test_capacity_never_exceeded(seq):
+    cache = fresh_cache()
+    now = 0.0
+    for intent, para, dt in seq:
+        now += dt
+        q = WORLD.query(intent, para)
+        emb = WORLD.embed(q)
+        res = cache.lookup(q, emb, now)
+        if not res.hit:
+            cache.insert(q, emb, WORLD.fetch(q), now=now, cost=0.005,
+                         latency=0.4, size=WORLD.value_size(q))
+        # invariants
+        assert cache.usage <= cache.capacity_bytes
+        assert cache.usage == sum(se.size for se in cache.store.values())
+        assert len(cache.store) == len(cache.rows)
+        assert len(cache.seri.index) == len(cache.store)
+
+
+@given(ops)
+@settings(max_examples=25, deadline=None)
+def test_no_expired_item_ever_hits(seq):
+    cache = fresh_cache(max_ttl=120.0)
+    now = 0.0
+    for intent, para, dt in seq:
+        now += dt
+        q = WORLD.query(intent, para)
+        emb = WORLD.embed(q)
+        res = cache.lookup(q, emb, now)
+        if res.hit:
+            assert not res.se.expired(now)
+        else:
+            cache.insert(q, emb, WORLD.fetch(q), now=now, cost=0.005,
+                         latency=0.4, size=WORLD.value_size(q))
+
+
+@given(ops)
+@settings(max_examples=25, deadline=None)
+def test_semantic_hits_are_correct_with_perfect_judge(seq):
+    """With a perfect judge every hit serves the right intent's answer."""
+    cache = fresh_cache(acc=1.0)
+    now = 0.0
+    for intent, para, dt in seq:
+        now += dt
+        q = WORLD.query(intent, para)
+        emb = WORLD.embed(q)
+        res = cache.lookup(q, emb, now)
+        if res.hit:
+            assert res.se.value == WORLD.answer(q)
+        else:
+            cache.insert(q, emb, WORLD.fetch(q), now=now, cost=0.005,
+                         latency=0.4, size=WORLD.value_size(q))
+
+
+def test_lcfu_evicts_lowest_score():
+    cache = fresh_cache(capacity=5_000)
+    now = 0.0
+    inserted = []
+    for i in range(30):
+        q = WORLD.query(i, 0)
+        emb = WORLD.embed(q)
+        se = cache.insert(q, emb, WORLD.fetch(q), now=now, cost=0.005,
+                          latency=0.4, size=WORLD.value_size(q))
+        inserted.append(se)
+        now += 1.0
+        # every survivor must score >= every evicted item at eviction time
+    surviving = set(cache.store)
+    scores = {se.se_id: se.lcfu_score(now) for se in inserted}
+    if surviving and len(surviving) < len(inserted):
+        max_evicted = max(
+            s for i, s in scores.items() if i not in surviving
+        )
+        # allow ties; freq growth can reorder later, so compare loosely:
+        # at least one survivor must outscore the best evicted item
+        assert any(
+            scores[i] >= max_evicted for i in surviving
+        )
+
+
+def test_ttl_from_staticity_monotone():
+    ttls = [ttl_from_staticity(s, 3600.0) for s in range(1, 11)]
+    assert all(a <= b for a, b in zip(ttls, ttls[1:]))
+    assert ttls[0] == 30.0
+    assert abs(ttls[-1] - 3600.0) < 1e-6
+
+
+def test_eviction_policies_differ():
+    """LCFU keeps high-cost items that LRU would drop."""
+    from repro.core.seri import Seri, VectorIndex
+    from repro.core.cache import CortexCache
+
+    for ev in ("lcfu", "lru", "lfu"):
+        cache = fresh_cache(capacity=1_500, eviction=ev)
+        now = 0.0
+        for i in range(5):  # expensive, once-validated items
+            q = WORLD.query(i, 0)
+            cache.insert(q, WORLD.embed(q), WORLD.fetch(q), now=now,
+                         cost=0.5, latency=2.0, size=100)
+            # one confirmed semantic hit -> freq=1 (Algorithm 2: fresh
+            # items score 0 regardless of cost — prefetch self-correction)
+            q2 = WORLD.query(i, 1)
+            assert cache.lookup(q2, WORLD.embed(q2), now).hit
+            now += 1.0
+        for i in range(5, 25):  # cheap one-shot items, each also hit once
+            q = WORLD.query(i, 0)
+            cache.insert(q, WORLD.embed(q), WORLD.fetch(q), now=now,
+                         cost=1e-4, latency=0.05, size=100)
+            q2 = WORLD.query(i, 1)
+            cache.lookup(q2, WORLD.embed(q2), now)
+            now += 1.0
+        kept = {WORLD.intent_of(se.key) for se in cache.store.values()}
+        if ev == "lcfu":
+            # expensive early items survive under LCFU
+            assert any(i < 5 for i in kept)
+        if ev == "lru":
+            # pure recency: the early expensive items are gone
+            assert not any(i < 5 for i in kept)

@@ -1,0 +1,66 @@
+"""Continuous-batching generator (real models, co-located judge) + 8-bit
+AdamW tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, shrink
+from repro.serving.generator import ContinuousBatcher, GenRequest
+from repro.train.optim import AdamWConfig, adamw_update, init_state
+from repro.train.quant_opt import adamw8_update, init_state8, state8_bytes
+
+
+def test_continuous_batching_with_colocated_judge():
+    cfg = shrink(get_config("search-r1-7b"), d_model=64, vocab=128,
+                 n_repeat=2)
+    judge_runs = []
+
+    def judge():
+        judge_runs.append(1)
+
+    cb = ContinuousBatcher(cfg, slots=3, max_len=64, judge=judge)
+    rng = np.random.default_rng(0)
+    reqs = [
+        GenRequest(i, rng.integers(1, 128, size=int(rng.integers(3, 8))),
+                   max_new=5)
+        for i in range(6)
+    ]
+    for r in reqs:
+        cb.submit(r)
+    ticks = cb.run()
+    assert all(r.done for r in reqs)
+    assert all(len(r.out_tokens) == 5 for r in reqs)
+    # determinism: same prompt in a fresh batcher gives the same tokens
+    cb2 = ContinuousBatcher(cfg, slots=3, max_len=64)
+    r2 = GenRequest(0, reqs[0].prompt, max_new=5)
+    cb2.submit(r2)
+    cb2.run()
+    assert r2.out_tokens == reqs[0].out_tokens
+    # priority rule: judge ran only on ticks with an empty admit queue
+    assert cb.judge_batches_run > 0
+    assert cb.judge_batches_run <= ticks
+
+
+def test_adamw8_tracks_fp32_adamw():
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0,
+                      total_steps=300, schedule="const", grad_clip=0.0)
+    target = jnp.array([1.0, -2.0, 0.5, 3.0] * 64)  # 256 = one block
+    p32 = {"w": jnp.zeros(256)}
+    p8 = {"w": jnp.zeros(256)}
+    s32 = init_state(cfg, p32)
+    s8 = init_state8(p8, block=64)
+    for _ in range(300):
+        g32 = {"w": 2 * (p32["w"] - target)}
+        g8 = {"w": 2 * (p8["w"] - target)}
+        p32, s32, _ = adamw_update(cfg, p32, g32, s32)
+        p8, s8, _ = adamw8_update(cfg, p8, g8, s8)
+    np.testing.assert_allclose(np.asarray(p32["w"]), np.asarray(target),
+                               atol=1e-2)
+    np.testing.assert_allclose(np.asarray(p8["w"]), np.asarray(target),
+                               atol=5e-2)  # int8 states still converge
+
+
+def test_state8_memory_wins():
+    params = {"w": jnp.zeros((1024, 1024), jnp.bfloat16)}
+    fp32_bytes = 2 * params["w"].size * 4
+    assert state8_bytes(params) < 0.3 * fp32_bytes

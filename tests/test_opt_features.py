@@ -1,0 +1,98 @@
+"""Tests for the beyond-paper optimization features added in §Perf:
+chunked-vocab fused loss, int8 KV cache, carry-cache decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.lm import LM
+from repro.nn.config import AttnConfig, LayerSpec, ModelConfig
+from repro.nn.param import init_tree
+from repro.nn.sharding import ShardCtx
+from repro.nn.xent import chunked_xent
+
+CTX = ShardCtx(None)
+
+
+def _dense_xent(x, w, lab, cap=0.0):
+    lg = (x @ w.T).astype(jnp.float32)
+    if cap:
+        lg = jnp.tanh(lg / cap) * cap
+    m = jax.lax.stop_gradient(lg.max(axis=1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lg - m), axis=1)) + m[:, 0]
+    picked = jnp.take_along_axis(lg, lab[:, None], 1)[:, 0]
+    return jnp.mean(lse - picked)
+
+
+@pytest.mark.parametrize("v,chunk,cap", [
+    (1000, 96, 0.0), (1000, 96, 30.0), (512, 512, 0.0), (769, 100, 0.0),
+])
+def test_chunked_xent_matches_dense(v, chunk, cap, rng):
+    t, d = 48, 24
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((v, d)) * 0.1, jnp.float32)
+    lab = jnp.asarray(rng.integers(0, v, t))
+    l1 = _dense_xent(x, w, lab, cap)
+    l2 = chunked_xent(x, w, lab, chunk, cap)
+    assert abs(float(l1 - l2)) < 1e-5
+    g1 = jax.grad(lambda a, b: _dense_xent(a, b, lab, cap), (0, 1))(x, w)
+    g2 = jax.grad(
+        lambda a, b: chunked_xent(a, b, lab, chunk, cap), (0, 1)
+    )(x, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+def _tiny_lm():
+    attn = AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16)
+    cfg = ModelConfig(
+        "t", "dense", 64, 97,
+        blocks=(LayerSpec(kind="attn", attn=attn, d_ff=128),), n_repeat=2,
+        param_dtype="float32", compute_dtype="float32",
+    )
+    lm = LM(cfg)
+    params = init_tree(jax.random.PRNGKey(0), lm.param_specs())
+    return lm, params
+
+
+def test_int8_kv_decode_close_to_fp():
+    lm, params = _tiny_lm()
+    S = 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S + 1), 0, 97)
+    c_fp = jax.tree.map(
+        jnp.zeros_like,
+        init_tree(jax.random.PRNGKey(2), lm.cache_specs(1, S + 1)),
+    )
+    c_q8 = jax.tree.map(
+        jnp.zeros_like,
+        init_tree(
+            jax.random.PRNGKey(2), lm.cache_specs(1, S + 1, kv_quant=True)
+        ),
+    )
+    for t in range(S + 1):
+        lg_fp, c_fp = lm.decode(CTX, params, toks[:, t:t + 1], c_fp,
+                                jnp.int32(t))
+        lg_q8, c_q8 = lm.decode(CTX, params, toks[:, t:t + 1], c_q8,
+                                jnp.int32(t))
+    rel = float(jnp.max(jnp.abs(lg_fp - lg_q8))) / float(
+        jnp.max(jnp.abs(lg_fp))
+    )
+    assert rel < 0.05, f"int8 KV drift {rel:.3f}"
+    # quantized cache really is int8
+    leaves = jax.tree.leaves(c_q8)
+    assert any(l.dtype == jnp.int8 for l in leaves)
+
+
+def test_carry_cache_decode_structure():
+    """Decode preserves the cache tree and only mutates position `pos`."""
+    lm, params = _tiny_lm()
+    S = 16
+    caches = jax.tree.map(
+        jnp.zeros_like,
+        init_tree(jax.random.PRNGKey(2), lm.cache_specs(1, S)),
+    )
+    tok = jnp.array([[5]], jnp.int32)
+    _, nc = lm.decode(CTX, params, tok, caches, jnp.int32(3))
+    k = nc["blocks"]["l0"]["mixer"]["k"]  # (n_repeat, B, S, kv, dh)
+    written = np.asarray(jnp.any(k != 0, axis=(0, 1, 3, 4)))
+    assert written[3] and not written[:3].any() and not written[4:].any()

@@ -1,0 +1,80 @@
+"""Algorithm 1 (threshold recalibration) + Markov prefetcher properties."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.prefetch import MarkovPrefetcher
+from repro.core.recalibrate import (
+    EvalRecord, find_threshold, precision_curve, recalibrate,
+)
+
+
+def test_precision_curve_prefix_semantics(rng):
+    scores = rng.random(200)
+    labels = rng.random(200) > 0.3
+    curve = precision_curve(scores, labels)
+    # each entry's precision equals precision of the prefix at that threshold
+    for thr, prec, rec in curve[:: 20]:
+        keep = scores >= thr
+        assert abs(prec - labels[keep].mean()) < 1e-9
+
+
+@given(st.floats(0.5, 0.99))
+@settings(max_examples=20, deadline=None)
+def test_find_threshold_achieves_target(p_target):
+    rng = np.random.default_rng(3)
+    # separable-ish scores
+    n = 400
+    labels = rng.random(n) < 0.6
+    scores = np.where(labels, 1 - rng.beta(1, 19, n), rng.beta(1, 19, n))
+    curve = precision_curve(scores, labels)
+    tau = find_threshold(curve, p_target)
+    keep = scores >= tau
+    if keep.any():
+        assert labels[keep].mean() >= p_target - 1e-9
+
+
+def test_recalibrate_end_to_end(world, rng):
+    # log with mixed correct/incorrect cached pairs
+    log = []
+    for i in range(300):
+        intent = int(rng.integers(0, 100))
+        wrong = rng.random() < 0.3
+        c_intent = intent + 1 if wrong else intent
+        q = world.query(intent, int(rng.integers(0, 20)))
+        c = world.query(c_intent % 100, 0)
+        score = (
+            float(rng.beta(1, 19)) if wrong else float(1 - rng.beta(1, 19))
+        )
+        log.append(EvalRecord(q, c, world.answer(c), score))
+    res = recalibrate(
+        log, world.fetch, world.equivalent, p_target=0.95, sample_size=128,
+        rng=rng,
+    )
+    assert res.precision >= 0.9  # sampled precision near target
+    assert 0.0 < res.tau <= 1.0
+
+
+def test_markov_prefetcher_learns_transitions():
+    pf = MarkovPrefetcher(confidence=0.6, min_support=3)
+    for _ in range(5):
+        for s in ("a", "b", "c"):
+            pf.observe(s)
+        pf.reset_session()
+    pred = pf.predict("a")
+    assert pred is not None and pred.state == "b" and pred.prob == 1.0
+    pred = pf.predict("c")  # c only followed by session reset
+    assert pred is None
+
+
+@given(st.lists(st.integers(0, 4), min_size=2, max_size=200))
+@settings(max_examples=30, deadline=None)
+def test_markov_probabilities_valid(seq):
+    pf = MarkovPrefetcher(confidence=0.0, min_support=1)
+    for s in seq:
+        pf.observe(s)
+    for s in set(seq):
+        pred = pf.predict(s)
+        if pred is not None:
+            assert 0.0 < pred.prob <= 1.0
+            assert pred.support <= pf.totals[s]
