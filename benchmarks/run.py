@@ -25,6 +25,7 @@ ALL = {
     "kernel_ann": kernels_bench.kernel_ann,
     "kernel_flash": kernels_bench.kernel_flash,
     "cache_path": kernels_bench.cache_path_calibration,
+    "cache_batched": kernels_bench.cache_batched,
 }
 
 

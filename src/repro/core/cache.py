@@ -10,14 +10,22 @@ Turns probabilistic similarity into deterministic cache semantics:
   value-score until under capacity.
 * capacity is byte-based (cache_ratio × workload footprint in the
   benchmarks, matching the paper's "cache size ratio" axis).
+
+Runtime layout (DESIGN.md §8): SE metadata lives in ``SEStore`` parallel
+arrays row-aligned with the ``VectorIndex``, so the TTL purge is a boolean
+mask, LCFU scoring is one vectorized expression, and victim selection uses
+``argpartition`` instead of a full sort. ``lookup``/``insert`` are
+one-element wrappers over ``lookup_batch``/``insert_batch`` internals, so
+the scalar and batched paths share semantics by construction.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.core.se_store import SEStore, SEStoreMapping
 from repro.core.semantic_element import SemanticElement, ttl_from_staticity
 from repro.core.seri import Seri, SeriResult, VectorIndex
 
@@ -55,18 +63,20 @@ class CortexCache:
         self.max_ttl = max_ttl
         self.min_ttl = min_ttl
         self.eviction = eviction
-        self.store: dict[int, SemanticElement] = {}
-        self.rows: dict[int, int] = {}  # se_id -> index row
+        self.soa = SEStore(seri.index.capacity)
+        self.store = SEStoreMapping(self.soa)  # dict-like se_id -> SE view
         self.usage = 0
         self.stats = CacheStats()
         self._next_id = 0
 
+    @property
+    def rows(self) -> dict[int, int]:
+        """se_id -> index row (row-aligned SoA: the store's own map)."""
+        return self.soa.id2row
+
     # ------------------------------------------------------------ lookup
 
-    def lookup(self, query: str, q_emb: np.ndarray, now: float) -> SeriResult:
-        self.stats.lookups += 1
-        res = self.seri.retrieve(query, q_emb, self.store, now)
-        self.stats.judge_calls += res.judge_calls
+    def _account_hit(self, res: SeriResult, now: float) -> None:
         if res.hit:
             se = res.se
             se.freq += 1
@@ -76,7 +86,22 @@ class CortexCache:
                 self.stats.prefetch_hits += 1
         else:
             self.stats.misses += 1
-        return res
+
+    def lookup(self, query: str, q_emb: np.ndarray, now: float) -> SeriResult:
+        return self.lookup_batch([query], q_emb[None], now)[0]
+
+    def lookup_batch(self, queries: Sequence[str], q_embs: np.ndarray,
+                     now: float) -> list[SeriResult]:
+        """Batched full lookup: stage 1 for the whole block in one masked
+        matmul / ``ann_topk`` launch, stage 2 in one judge call. Hit
+        bookkeeping is applied in query order, so the hit/miss sequence is
+        identical to sequential scalar lookups from the same state."""
+        self.stats.lookups += len(queries)
+        results = self.seri.retrieve_batch(queries, q_embs, self.store, now)
+        for res in results:
+            self.stats.judge_calls += res.judge_calls
+            self._account_hit(res, now)
+        return results
 
     # ---------------------------------------------------- staged lookup
     # The serving engine needs the two Seri stages split so the judge can
@@ -84,15 +109,22 @@ class CortexCache:
     # ANN candidates; finalize = apply judge scores -> deterministic hit.
 
     def stage1(self, query: str, q_emb: np.ndarray, now: float):
-        self.stats.lookups += 1
-        se_ids, sims = self.seri.index.search(
-            q_emb, self.seri.top_k, self.seri.tau_sim
+        return self.stage1_batch([query], q_emb[None], now)[0]
+
+    def stage1_batch(self, queries: Sequence[str], q_embs: np.ndarray,
+                     now: float) -> list[list[SemanticElement]]:
+        """ANN candidates for a query block (engine micro-batching)."""
+        self.stats.lookups += len(queries)
+        found = self.seri.index.search_batch(
+            np.asarray(q_embs), self.seri.top_k, self.seri.tau_sim
         )
-        cands = [
-            self.store[i] for i in se_ids
-            if i in self.store and not self.store[i].expired(now)
-        ]
-        return cands
+        out = []
+        for se_ids, _sims in found:
+            out.append([
+                self.store[i] for i in se_ids
+                if i in self.store and not self.store[i].expired(now)
+            ])
+        return out
 
     def finalize(self, query: str, cands, scores, now: float) -> SeriResult:
         self.stats.judge_calls += len(cands)
@@ -135,11 +167,16 @@ class CortexCache:
     ) -> SemanticElement:
         staticity = staticity or self.seri.judge.staticity(query)
         ttl = ttl_from_staticity(staticity, self.max_ttl, self.min_ttl)
-        se = SemanticElement(
-            se_id=self._next_id,
+        self._make_room(size, now)
+        if self.seri.index.full:
+            self._evict_n(1, now)
+        se_id = self._next_id
+        self._next_id += 1
+        row = self.seri.index.add(se_id, q_emb)
+        se = self.soa.add(
+            row, se_id,
             key=query,
             value=value,
-            embedding=q_emb,
             staticity=staticity,
             cost=cost,
             latency=latency,
@@ -154,19 +191,32 @@ class CortexCache:
             prefetched=prefetched,
             intent=intent,
         )
-        self._next_id += 1
-        self._make_room(size, now)
-        if self.seri.index.full:
-            self._evict_n(1, now)
-        row = self.seri.index.add(se.se_id, q_emb)
-        self.store[se.se_id] = se
-        self.rows[se.se_id] = row
         self.usage += size
         self.stats.insertions += 1
         if prefetched:
             self.stats.prefetch_inserts += 1
         self.stats.bytes_stored = self.usage
         return se
+
+    def insert_batch(self, items: Sequence[dict], *,
+                     now: float) -> list[SemanticElement]:
+        """Admit a block of fetch results. Staticity estimation is batched
+        through the judge up front; the admissions themselves apply in
+        order (each may trigger eviction that the next must observe), so
+        the eviction sequence matches sequential ``insert`` calls."""
+        staticities = [
+            it.get("staticity") or self.seri.judge.staticity(it["query"])
+            for it in items
+        ]
+        out = []
+        for it, st in zip(items, staticities):
+            kw = dict(it)
+            q = kw.pop("query")
+            emb = kw.pop("q_emb")
+            value = kw.pop("value")
+            kw["staticity"] = st
+            out.append(self.insert(q, emb, value, now=now, **kw))
+        return out
 
     def contains_semantic(self, query: str, q_emb: np.ndarray,
                           now: float) -> bool:
@@ -181,45 +231,44 @@ class CortexCache:
     # ------------------------------------------------------------ evict
 
     def _remove(self, se_id: int, *, ttl: bool) -> None:
-        se = self.store.pop(se_id)
-        row = self.rows.pop(se_id)
-        self.seri.index.remove(row)
-        self.usage -= se.size
+        row = self.soa.id2row[se_id]
+        self._remove_rows(np.asarray([row]), ttl=ttl)
+
+    def _remove_rows(self, rows: np.ndarray, *, ttl: bool) -> None:
+        """Batched removal: index rows + SoA fields in one pass."""
+        n = len(rows)
+        if not n:
+            return
+        freed = int(self.soa.size[rows].sum())
+        self.seri.index.remove_rows(rows)
+        for r in rows:
+            self.soa.remove_row(int(r))
+        self.usage -= freed
         if ttl:
-            self.stats.ttl_evictions += 1
+            self.stats.ttl_evictions += n
         else:
-            self.stats.evictions += 1
+            self.stats.evictions += n
         self.stats.bytes_stored = self.usage
 
     def purge_expired(self, now: float) -> int:
-        dead = [i for i, se in self.store.items() if se.expired(now)]
-        for i in dead:
-            self._remove(i, ttl=True)
+        """TTL purge as one boolean mask over the SoA arrays."""
+        dead = self.soa.expired_rows(now)
+        self._remove_rows(dead, ttl=True)
         return len(dead)
-
-    def _victim_order(self, now: float):
-        if self.eviction == "lru":
-            key = lambda se: se.last_access
-        elif self.eviction == "lfu":
-            key = lambda se: (se.freq, se.last_access)
-        else:  # lcfu (Algorithm 2)
-            key = lambda se: se.lcfu_score(now)
-        return sorted(self.store.values(), key=key)
 
     def _make_room(self, incoming: int, now: float) -> None:
         if self.usage + incoming <= self.capacity_bytes:
             return
         self.purge_expired(now)  # TTL purge first (Algorithm 2 line 6)
-        if self.usage + incoming <= self.capacity_bytes:
+        need = self.usage + incoming - self.capacity_bytes
+        if need <= 0:
             return
-        for se in self._victim_order(now):
-            if self.usage + incoming <= self.capacity_bytes:
-                break
-            self._remove(se.se_id, ttl=False)
+        victims = self.soa.victim_rows(now, self.eviction, need_bytes=need)
+        self._remove_rows(victims, ttl=False)
 
     def _evict_n(self, n: int, now: float) -> None:
-        for se in self._victim_order(now)[:n]:
-            self._remove(se.se_id, ttl=False)
+        victims = self.soa.victim_rows(now, self.eviction, n=n)
+        self._remove_rows(victims, ttl=False)
 
     # ------------------------------------------------------------ misc
 

@@ -30,13 +30,58 @@ class JudgeVerdict:
 
 
 class OracleJudge:
-    """Ground-truth-backed judge with calibrated score noise."""
+    """Ground-truth-backed judge with calibrated score noise.
+
+    Score noise is seeded per **(pair, nth-scoring-of-that-pair)** from a
+    stable hash of the pair text — not drawn from one shared stream — so
+    scores do not depend on how requests are micro-batched, reordered
+    across lanes, or interleaved with other requests (DESIGN.md §8:
+    batched and scalar execution stay bit-identical). Re-scoring the
+    same pair later re-rolls (the judge's borderline mistakes stay
+    transient, so threshold recalibration sees fresh noise, as with the
+    original shared-stream model)."""
 
     def __init__(self, world, accuracy: float = 0.98, seed: int = 0):
         self.world = world
-        self.rng = np.random.default_rng(seed)
+        self.seed = seed
         # score distributions: equivalent pairs ~ high, others ~ low
         self.acc = accuracy
+        # nth-scoring counter per pair; bounded by the number of distinct
+        # (query, cached_key) combinations the workload can produce
+        self._pair_counts: dict = {}
+
+    @staticmethod
+    def _u01(x: int, salt: int) -> float:
+        """splitmix64 finalizer -> uniform in [0, 1). Counter-based
+        hashing is ~10× cheaper than constructing a Generator per pair,
+        which matters because scoring sits on the hot lookup path."""
+        m = (1 << 64) - 1
+        x = (x + salt * 0x9E3779B97F4A7C15) & m
+        x ^= x >> 30
+        x = (x * 0xBF58476D1CE4E5B9) & m
+        x ^= x >> 27
+        x = (x * 0x94D049BB133111EB) & m
+        x ^= x >> 31
+        return x / 2.0**64
+
+    def _pair_score(self, q: str, c: str) -> float:
+        import zlib
+
+        n = self._pair_counts.get((q, c), 0)
+        self._pair_counts[(q, c)] = n + 1
+        ent = zlib.crc32(f"{q}\x00{c}".encode())
+        base = (ent << 32) ^ (n << 8) ^ (self.seed & 0xFF)
+        same = self.world.same_intent(q, c)
+        correct = self._u01(base, 1) < self.acc
+        positive = same if correct else not same
+        # Beta(1, b) via inverse CDF: x = 1 - (1-u)^(1/b)
+        u = self._u01(base, 2)
+        if positive:
+            # P(score < 0.9) ≈ 0.04 — a few true matches fall below
+            # τ_lsm=0.9; with capacity/TTL misses this lands at the
+            # paper's ~85-88% steady-state hit rates
+            return (1.0 - u) ** (1.0 / 30.0)
+        return 1.0 - (1.0 - u) ** (1.0 / 19.0)
 
     def score_pairs(
         self, queries: Sequence[str], cached_keys: Sequence[str]
@@ -44,16 +89,7 @@ class OracleJudge:
         """S_lsm per (query, cached) pair."""
         out = np.empty(len(queries), np.float32)
         for i, (q, c) in enumerate(zip(queries, cached_keys)):
-            same = self.world.same_intent(q, c)
-            correct = self.rng.random() < self.acc
-            positive = same if correct else not same
-            if positive:
-                # P(score < 0.9) ≈ 0.04 — a few true matches fall below
-                # τ_lsm=0.9; with capacity/TTL misses this lands at the
-                # paper's ~85-88% steady-state hit rates
-                out[i] = 1.0 - self.rng.beta(1.0, 30.0)
-            else:
-                out[i] = self.rng.beta(1.0, 19.0)
+            out[i] = self._pair_score(q, c)
         return out
 
     def staticity(self, query: str) -> int:

@@ -1,0 +1,194 @@
+"""SEStore — structure-of-arrays runtime for Semantic Elements (DESIGN.md §8).
+
+The cache core used to be a ``dict[int, SemanticElement]`` of dataclasses:
+every TTL purge walked the dict in Python, every LCFU eviction pass did a
+full ``sorted(...)`` with a per-item Python score, and stage-1 retrieval
+touched one query at a time. This module flips the layout: one parallel
+numpy array per SE field, row-aligned with the ``VectorIndex`` embedding
+matrix, so
+
+  * TTL purge is a boolean mask (``active & (expires_at <= now)``),
+  * ``lcfu_score`` is one vectorized expression over all rows,
+  * victim selection is ``argpartition`` (O(n) expected) instead of an
+    O(n log n) sort — with exact tie-break parity against the legacy
+    stable sort (score, then se_id == insertion order),
+  * batched lookups score candidates for a whole query block at once.
+
+``SemanticElement`` (semantic_element.py) remains the public per-item API,
+now as a thin live view onto one row of this store.
+"""
+from __future__ import annotations
+
+from collections.abc import Mapping
+from typing import Iterator
+
+import numpy as np
+
+from repro.core.semantic_element import SemanticElement
+
+# numeric metadata fields, one parallel array each
+_F64 = ("last_access", "created_at", "expires_at", "cost", "latency")
+_I64 = ("freq", "size")
+
+
+class SEStore:
+    """Per-field parallel arrays for up to ``capacity`` SEs.
+
+    Rows are assigned by the companion ``VectorIndex`` (same free-list), so
+    ``store.freq[r]`` and ``index.emb[r]`` always describe the same SE.
+    """
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.se_id = np.full(capacity, -1, np.int64)
+        self.freq = np.zeros(capacity, np.int64)
+        self.size = np.zeros(capacity, np.int64)
+        self.last_access = np.zeros(capacity, np.float64)
+        self.created_at = np.zeros(capacity, np.float64)
+        self.expires_at = np.zeros(capacity, np.float64)
+        self.cost = np.zeros(capacity, np.float64)
+        self.latency = np.zeros(capacity, np.float64)
+        self.staticity = np.zeros(capacity, np.int32)
+        self.prefetched = np.zeros(capacity, bool)
+        self.active = np.zeros(capacity, bool)
+        self.key = np.empty(capacity, object)
+        self.value = np.empty(capacity, object)
+        self.intent = np.empty(capacity, object)
+        self.id2row: dict[int, int] = {}
+
+    # ---------------------------------------------------------- mutation
+
+    def add(self, row: int, se_id: int, *, key, value, staticity, cost,
+            latency, size, created_at, expires_at, freq, last_access,
+            prefetched, intent) -> SemanticElement:
+        self.se_id[row] = se_id
+        self.freq[row] = freq
+        self.size[row] = size
+        self.last_access[row] = last_access
+        self.created_at[row] = created_at
+        self.expires_at[row] = expires_at
+        self.cost[row] = cost
+        self.latency[row] = latency
+        self.staticity[row] = staticity
+        self.prefetched[row] = prefetched
+        self.active[row] = True
+        self.key[row] = key
+        self.value[row] = value
+        self.intent[row] = intent
+        self.id2row[se_id] = row
+        return SemanticElement(self, row)
+
+    def remove_row(self, row: int) -> int:
+        """Deactivate one row; returns the freed byte count."""
+        size = int(self.size[row])
+        del self.id2row[int(self.se_id[row])]
+        self.active[row] = False
+        self.se_id[row] = -1
+        self.key[row] = None
+        self.value[row] = None
+        self.intent[row] = None
+        return size
+
+    # ------------------------------------------------------------ views
+
+    def view(self, se_id: int) -> SemanticElement:
+        return SemanticElement(self, self.id2row[se_id])
+
+    # --------------------------------------------------------- vectorized
+
+    def expired_rows(self, now: float) -> np.ndarray:
+        """Row indices of all expired live SEs — the TTL-purge mask."""
+        return np.flatnonzero(self.active & (now >= self.expires_at))
+
+    def lcfu_scores(self, rows: np.ndarray, now: float) -> np.ndarray:
+        """Algorithm 2 CalScore for a row block, one vector expression."""
+        score = (
+            np.log(self.freq[rows] + 1.0)
+            * np.log(self.cost[rows] * 1e3 + 1.0)
+            * np.log(self.latency[rows] + 1.0)
+            * np.log(self.staticity[rows] + 1.0)
+        )
+        size = self.size[rows]
+        live = (size > 0) & (self.expires_at[rows] - now > 0)
+        return np.where(live, score / np.maximum(size, 1), 0.0)
+
+    def _victim_keys(self, rows: np.ndarray, now: float, policy: str):
+        """(primary, minor-tie keys) replicating the legacy sort orders:
+        lcfu -> (score, se_id); lru -> (last_access, se_id);
+        lfu -> (freq, last_access, se_id). se_id ascending == the old
+        stable sort over dict insertion order."""
+        if policy == "lru":
+            return self.last_access[rows], (self.se_id[rows],)
+        if policy == "lfu":
+            return (self.freq[rows].astype(np.float64),
+                    (self.last_access[rows], self.se_id[rows]))
+        return self.lcfu_scores(rows, now), (self.se_id[rows],)
+
+    def _smallest_in_order(self, rows, primary, ties, k: int) -> np.ndarray:
+        """The k globally-smallest rows by (primary, *ties), in eviction
+        order. argpartition selects a candidate superset (expanded to cover
+        boundary ties), then only that superset is key-sorted."""
+        m = len(rows)
+        k = min(k, m)
+        if k <= 0:
+            return rows[:0]
+        if k >= m:
+            sel = np.arange(m)
+        else:
+            part = np.argpartition(primary, k - 1)[:k]
+            thr = primary[part].max()
+            sel = np.flatnonzero(primary <= thr)
+        # np.lexsort keys: minor first, primary last
+        order = np.lexsort(
+            tuple(t[sel] for t in reversed(ties)) + (primary[sel],)
+        )
+        return rows[sel[order][:k]]
+
+    def victim_rows(self, now: float, policy: str, *, n: int = 0,
+                    need_bytes: int = 0) -> np.ndarray:
+        """Rows to evict, in order: either exactly ``n`` victims, or just
+        enough to free ``need_bytes``. Expected O(n_live) via argpartition
+        with doubling-k, vs the legacy full sort."""
+        rows = np.flatnonzero(self.active)
+        if len(rows) == 0:
+            return rows
+        primary, ties = self._victim_keys(rows, now, policy)
+        if n:
+            return self._smallest_in_order(rows, primary, ties, n)
+        k = min(32, len(rows))
+        while True:
+            cand = self._smallest_in_order(rows, primary, ties, k)
+            freed = np.cumsum(self.size[cand])
+            if freed[-1] >= need_bytes or len(cand) == len(rows):
+                cut = int(np.searchsorted(freed, need_bytes)) + 1
+                return cand[:cut] if freed[-1] >= need_bytes else cand
+            k *= 2
+
+    @property
+    def usage(self) -> int:
+        return int(self.size[self.active].sum())
+
+    def __len__(self) -> int:
+        return len(self.id2row)
+
+
+class SEStoreMapping(Mapping):
+    """dict-compatible read view (``cache.store``): se_id -> live SE view.
+
+    Keeps the legacy ``dict[int, SemanticElement]`` API working — iteration
+    order is insertion order (se_id ascending), membership is O(1)."""
+
+    def __init__(self, store: SEStore):
+        self._s = store
+
+    def __getitem__(self, se_id: int) -> SemanticElement:
+        return self._s.view(se_id)
+
+    def __iter__(self) -> Iterator[int]:
+        return iter(list(self._s.id2row))
+
+    def __len__(self) -> int:
+        return len(self._s.id2row)
+
+    def __contains__(self, se_id) -> bool:
+        return se_id in self._s.id2row

@@ -10,32 +10,71 @@ and the performance-aware metadata driving eviction/TTL decisions:
                        with high fetch cost are worth more per byte.
   * freq       — confirmed semantic-hit count (only validated hits count).
   * size       — bytes of the cached value.
-"""
+
+Since the SoA refactor (DESIGN.md §8) the per-SE state lives in the
+``SEStore`` parallel arrays; ``SemanticElement`` is a thin *live view*
+onto one store row. Attribute reads/writes go straight to the arrays, so
+``se.freq += 1`` is visible to the vectorized eviction path and vice
+versa. The class keeps the old dataclass surface (same field names,
+``expired``/``ttl_remaining``/``lcfu_score``)."""
 from __future__ import annotations
 
-import dataclasses
-import math
 from typing import Any, Optional
 
 import numpy as np
 
 
-@dataclasses.dataclass
+def _field(name, cast):
+    def get(self):
+        return cast(getattr(self._store, name)[self._row])
+
+    def set_(self, v):
+        getattr(self._store, name)[self._row] = v
+
+    return property(get, set_)
+
+
 class SemanticElement:
-    se_id: int
-    key: str                       # the tool-call query (from <search>/<tool>)
-    value: Any                     # retrieved knowledge (from <info>)
-    embedding: np.ndarray          # unit-norm semantic fingerprint
-    staticity: int                 # 1..10
-    cost: float                    # $ per original remote fetch
-    latency: float                 # seconds of the original remote fetch
-    size: int                      # bytes
-    created_at: float
-    expires_at: float
-    freq: int = 0
-    last_access: float = 0.0
-    prefetched: bool = False       # entered via prefetch (freq starts at 0)
-    intent: Optional[int] = None   # synthetic-world ground-truth intent id
+    __slots__ = ("_store", "_row", "se_id")
+
+    def __init__(self, store, row: int):
+        self._store = store
+        self._row = int(row)
+        self.se_id = int(store.se_id[row])
+
+    # numeric metadata: live views into the SoA arrays
+    freq = _field("freq", int)
+    size = _field("size", int)
+    staticity = _field("staticity", int)
+    cost = _field("cost", float)
+    latency = _field("latency", float)
+    created_at = _field("created_at", float)
+    expires_at = _field("expires_at", float)
+    last_access = _field("last_access", float)
+    prefetched = _field("prefetched", bool)
+
+    @property
+    def key(self) -> str:
+        return self._store.key[self._row]
+
+    @property
+    def value(self) -> Any:
+        return self._store.value[self._row]
+
+    @property
+    def intent(self) -> Optional[int]:
+        return self._store.intent[self._row]
+
+    @property
+    def row(self) -> int:
+        return self._row
+
+    @property
+    def valid(self) -> bool:
+        """False once this row was evicted (or reused by another SE)."""
+        return int(self._store.se_id[self._row]) == self.se_id
+
+    # ------------------------------------------------------------ logic
 
     def expired(self, now: float) -> bool:
         return now >= self.expires_at
@@ -44,16 +83,16 @@ class SemanticElement:
         return self.expires_at - now
 
     def lcfu_score(self, now: float) -> float:
-        """Algorithm 2 CalScore: log-composite value per byte."""
-        if self.size == 0 or self.ttl_remaining(now) <= 0:
-            return 0.0
-        score = (
-            math.log(self.freq + 1.0)
-            * math.log(self.cost * 1e3 + 1.0)
-            * math.log(self.latency + 1.0)
-            * math.log(self.staticity + 1.0)
+        """Algorithm 2 CalScore: log-composite value per byte (delegates
+        to the store's vectorized kernel so view and batch paths agree
+        bit-for-bit)."""
+        return float(
+            self._store.lcfu_scores(np.asarray([self._row]), now)[0]
         )
-        return score / self.size
+
+    def __repr__(self) -> str:
+        return (f"SemanticElement(se_id={self.se_id}, key={self.key!r}, "
+                f"freq={self.freq}, size={self.size})")
 
 
 def ttl_from_staticity(staticity: int, max_ttl: float,

@@ -8,6 +8,14 @@ DESIGN.md §3); on CPU the numpy path is bit-identical.
 Stage 2 (fine): the semantic judge validates each candidate's *result*
 against the new query; the first candidate with S_lsm ≥ τ_lsm is a
 semantic-aware cache hit.
+
+Both stages are batched (DESIGN.md §8): ``search_batch`` pushes a whole
+(B, D) query block through one masked matmul (or one ``ann_topk`` launch,
+which always had the B dimension), and ``retrieve_batch`` scores the
+candidates of *all* queries in a single ``judge.score_pairs`` call. The
+scalar entry points are one-query wrappers over the batched path, so
+scalar and batched execution are the same code and produce identical
+results.
 """
 from __future__ import annotations
 
@@ -60,25 +68,60 @@ class VectorIndex:
         self.emb[row] = 0.0
         self._free.append(row)
 
+    def remove_rows(self, rows) -> None:
+        """Batched removal: one fancy-indexed store per field."""
+        rows = [r for r in rows if self.active[r]]
+        if not rows:
+            return
+        ra = np.asarray(rows)
+        self.active[ra] = False
+        self.emb[ra] = 0.0
+        for r in rows:
+            self.row_se[r] = None
+            self._free.append(r)
+
+    # ----------------------------------------------------------- search
+
     def search(self, q: np.ndarray, k: int, tau_sim: float):
         """Top-k rows with cosine ≥ tau_sim. q: (dim,) unit-norm.
         Returns (se_ids, sims) sorted by similarity desc."""
+        return self.search_batch(q[None], k, tau_sim)[0]
+
+    def search_batch(self, q: np.ndarray, k: int, tau_sim: float):
+        """Batched stage-1: q (B, dim) -> list of B (se_ids, sims) pairs.
+
+        One masked matmul over the whole query block; per-column top-k via
+        ``argpartition`` along axis 0. Each column's result is identical to
+        the single-query path (numpy partitions/sorts each 1-D lane
+        independently), so batching never changes retrieval semantics.
+        """
+        b = q.shape[0]
         if len(self) == 0:
-            return [], np.zeros(0, np.float32)
+            empty = ([], np.zeros(0, np.float32))
+            return [empty] * b
         if self._kernel_fn is not None:
             sims, rows = self._kernel_fn(self.emb, self.active, q, k)
             sims = np.asarray(sims)
             rows = np.asarray(rows)
         else:
-            scores = self.emb @ q
-            scores = np.where(self.active, scores, -1.0)
-            k_eff = min(k, len(scores))
-            rows = np.argpartition(-scores, k_eff - 1)[:k_eff]
-            rows = rows[np.argsort(-scores[rows])]
-            sims = scores[rows]
-        keep = sims >= tau_sim
-        rows, sims = rows[keep], sims[keep]
-        return [self.row_se[r] for r in rows], sims
+            # (B, N) row-major so the per-query partition/sort below runs
+            # over contiguous lanes (axis=0 on (N, B) is strided and ~3×
+            # slower at large N·B)
+            neg = np.where(self.active[None, :], q @ self.emb.T, -1.0)
+            np.negative(neg, out=neg)                     # sort ascending
+            k_eff = min(k, neg.shape[1])
+            part = np.argpartition(neg, k_eff - 1, axis=1)[:, :k_eff]
+            psc = np.take_along_axis(neg, part, axis=1)
+            order = np.argsort(psc, axis=1, kind="stable")
+            rows = np.take_along_axis(part, order, axis=1)     # (B, k)
+            sims = -np.take_along_axis(psc, order, axis=1)
+        out = []
+        for i in range(b):
+            keep = sims[i] >= tau_sim
+            r = rows[i][keep]
+            out.append(([self.row_se[j] for j in r],
+                        sims[i][keep].astype(np.float32)))
+        return out
 
 
 @dataclasses.dataclass
@@ -102,25 +145,54 @@ class Seri:
         self.tau_lsm = tau_lsm
         self.top_k = top_k
 
-    def retrieve(self, query: str, q_emb: np.ndarray,
-                 store: dict[int, SemanticElement],
+    def retrieve(self, query: str, q_emb: np.ndarray, store,
                  now: float) -> SeriResult:
-        se_ids, sims = self.index.search(q_emb, self.top_k, self.tau_sim)
-        # drop expired candidates (freshness is part of validity, §4.1)
-        cands = [
-            store[i] for i in se_ids
-            if i in store and not store[i].expired(now)
-        ]
-        if not cands:
-            return SeriResult(False, None, 0, 0, 0.0, sims)
-        scores = self.judge.score_pairs(
-            [query] * len(cands), [c.key for c in cands]
+        return self.retrieve_batch([query], q_emb[None], store, now)[0]
+
+    def retrieve_batch(self, queries: Sequence[str], q_embs: np.ndarray,
+                       store, now: float) -> list[SeriResult]:
+        """Full two-stage retrieval for a query block.
+
+        Candidates of every query are validated in ONE ``score_pairs``
+        call (the judge-prefill amortization the engine's micro-batching
+        exploits, paper §4.4). Pair order is (query order, candidate
+        order), i.e. exactly the order sequential scalar calls would use —
+        judges that consume rng state per pair draw identical scores.
+        """
+        found = self.index.search_batch(
+            np.asarray(q_embs), self.top_k, self.tau_sim
         )
-        order = np.argsort(-scores)
-        best = float(scores[order[0]])
-        for j in order:
-            if scores[j] >= self.tau_lsm:
-                return SeriResult(
-                    True, cands[j], len(cands), len(cands), best, sims
-                )
-        return SeriResult(False, None, len(cands), len(cands), best, sims)
+        per_q = []
+        flat_q: list[str] = []
+        flat_key: list[str] = []
+        for query, (se_ids, sims) in zip(queries, found):
+            # drop expired candidates (freshness is part of validity, §4.1)
+            cands = [
+                store[i] for i in se_ids
+                if i in store and not store[i].expired(now)
+            ]
+            per_q.append((cands, sims))
+            flat_q.extend([query] * len(cands))
+            flat_key.extend(c.key for c in cands)
+        flat_scores = (
+            self.judge.score_pairs(flat_q, flat_key) if flat_q
+            else np.zeros(0, np.float32)
+        )
+        results = []
+        off = 0
+        for cands, sims in per_q:
+            m = len(cands)
+            scores = flat_scores[off:off + m]
+            off += m
+            if not m:
+                results.append(SeriResult(False, None, 0, 0, 0.0, sims))
+                continue
+            order = np.argsort(-scores)
+            best = float(scores[order[0]])
+            res = None
+            for j in order:
+                if scores[j] >= self.tau_lsm:
+                    res = SeriResult(True, cands[j], m, m, best, sims)
+                    break
+            results.append(res or SeriResult(False, None, m, m, best, sims))
+        return results

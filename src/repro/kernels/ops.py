@@ -17,14 +17,29 @@ __all__ = ["ann_topk", "flash_attention_fwd", "decode_attention",
            "ann_topk_jit"]
 
 
+_B_ALIGN = 8  # fp32 sublane count: pad the query block to aligned shapes
+
+
 def ann_topk_jit(emb, active, q, k: int = 4):
-    """VectorIndex backend adapter: single query (D,) -> (sims, rows)."""
+    """VectorIndex backend adapter: (D,) or (B, D) queries -> (sims, rows).
+
+    The batched cache runtime sends variable-size query blocks (engine
+    micro-batches, DESIGN.md §8); padding B up to a multiple of the fp32
+    sublane count keeps the kernel's (B, D) block shape TPU-aligned and
+    bounds jit retraces to one per padded size. Each query column is
+    reduced independently inside the kernel, so the zero-padded rows are
+    sliced off without affecting real results."""
     single = q.ndim == 1
     if single:
         q = q[None]
+    b = q.shape[0]
+    pad = (-b) % _B_ALIGN
+    if pad:
+        q = jnp.pad(jnp.asarray(q), ((0, pad), (0, 0)))
     vals, rows = ann_topk(
         jnp.asarray(emb), jnp.asarray(active), jnp.asarray(q), k
     )
+    vals, rows = vals[:b], rows[:b]
     if single:
         return vals[0], rows[0]
     return vals, rows

@@ -17,6 +17,16 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.nn.sharding import shard_map_compat
+
+
+def _pcast_varying(x, axis: str):
+    """`jax.lax.pcast` annotates device-varying values for the new (jax ≥
+    0.5) shard_map rep checker; on older jax (check_rep=False fallback in
+    shard_map_compat) it doesn't exist and isn't needed."""
+    pcast = getattr(jax.lax, "pcast", None)
+    return x if pcast is None else pcast(x, (axis,), to="varying")
+
 
 def pipeline_apply(mesh, axis: str, stage_fn, stage_params, x_microbatches):
     """Run a pipeline over mesh axis `axis`.
@@ -38,8 +48,8 @@ def pipeline_apply(mesh, axis: str, stage_fn, stage_params, x_microbatches):
         sid = jax.lax.axis_index(axis)
         # state: the activation currently held by this stage (pcast to
         # device-varying: the loop makes them differ per stage)
-        buf = jax.lax.pcast(jnp.zeros_like(xs[0]), (axis,), to="varying")
-        outs = jax.lax.pcast(jnp.zeros_like(xs), (axis,), to="varying")
+        buf = _pcast_varying(jnp.zeros_like(xs[0]), axis)
+        outs = _pcast_varying(jnp.zeros_like(xs), axis)
 
         def tick(carry, t):
             buf, outs = carry
@@ -67,10 +77,7 @@ def pipeline_apply(mesh, axis: str, stage_fn, stage_params, x_microbatches):
         # only the last stage collected outputs; psum replicates them
         return jax.lax.psum(outs, axis)
 
-    return jax.shard_map(
-        inner,
-        mesh=mesh,
-        in_specs=(P(axis), P()),
-        out_specs=P(),
+    return shard_map_compat(
+        inner, mesh=mesh, in_specs=(P(axis), P()), out_specs=P(),
         axis_names={axis},
     )(stage_params, x_microbatches)

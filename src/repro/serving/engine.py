@@ -7,6 +7,13 @@ as a miss — the paper's degradation-not-blocking property), remote fetches
 through the rate-limited WAN service, LCFU admission/eviction, Markov
 prefetching, and periodic threshold recalibration.
 
+Concurrent requests are *micro-batched* (DESIGN.md §8): stage-1 lookups
+that land within one host-path window are flushed together through
+``CortexCache.stage1_batch`` (one masked matmul over the whole query
+block), and the judge dispatcher drains its backlog in micro-batches —
+one accelerator job and ONE ``score_pairs`` call per batch, with the
+shared prompt prefill amortized across co-batched requests (§4.4).
+
 Modes: "vanilla" (no cache), "exact" (exact-match KV cache),
 "cortex" (full), "cortex-nojudge" (ANN-only ablation, Fig 13).
 """
@@ -24,7 +31,7 @@ from repro.core.prefetch import MarkovPrefetcher
 from repro.core.recalibrate import EvalRecord, recalibrate
 from repro.data.workloads import Request
 from repro.data.world import SemanticWorld
-from repro.serving.gpu import GPU, GPUConfig
+from repro.serving.gpu import GPU, GPUConfig, judge_batch_tokens
 from repro.serving.remote import RemoteDataService
 
 
@@ -35,12 +42,15 @@ class EngineConfig:
     judge_tokens: float = 24.0          # prefill-only classification job
     t_cache_cpu: float = 0.02           # embed + ANN (paper Fig 11)
     judge_timeout: float = 0.25         # deferred validation ⇒ miss
+    judge_batch_max: int = 8            # judge micro-batch size cap (§4.4)
+    judge_batch_marginal: float = 0.5   # marginal prefill cost per co-batched req
     closed_loop: Optional[int] = None   # concurrency, or None = open loop
     prefetch: bool = True
     prefetch_confidence: float = 0.55
     prefetch_min_headroom: float = 0.2
     recalibrate_every: Optional[float] = None  # seconds; None = off
-    recal_samples: int = 5
+    recal_samples: int = 16             # ground-truth fetches per tick
+    recal_smooth: float = 0.5           # EMA weight on the new tau estimate
     p_target: float = 0.99
     em_p_base: float = 0.79             # EM | correct info (per dataset)
     em_p_wrong: float = 0.10            # EM | wrong cached info
@@ -71,8 +81,6 @@ class _ReqState:
     rec: RequestRecord
     round: int = 0
     round_t0: float = 0.0
-    judge_done: bool = False
-    judge_timed_out: bool = False
     info_values: list = dataclasses.field(default_factory=list)
 
 
@@ -100,7 +108,10 @@ class ExactCache:
 
     def insert(self, query: str, value, size: int, now: float):
         if query in self.d:
-            return
+            # refresh value + TTL in place (a stale entry would otherwise
+            # never be replaced and the key would permanently miss)
+            self.usage -= self.d.pop(query)[2]
+            self.order.remove(query)
         while self.usage + size > self.capacity and self.order:
             victim = self.order.pop(0)
             self.usage -= self.d.pop(victim)[2]
@@ -147,7 +158,9 @@ class Engine:
         self._now = 0.0
         self._pending = list(requests)
         self._active = 0
-        self._judge_backlog: list[tuple] = []
+        self._judge_backlog: list[dict] = []
+        self._stage1_pending: list[tuple] = []
+        self._stage1_open: Optional[float] = None  # current pass open time
         self._done = 0
         self._warm_cut = int(len(requests) * self.cfg.warmup_frac)
         self._warm_snap = None
@@ -212,17 +225,39 @@ class Engine:
             else:
                 self._go_remote(st)
             return
-        # cortex / cortex-nojudge: embed+ANN on host, then judge on chip
-        t0 = self._now
+        # cortex / cortex-nojudge: embed+ANN on host, then judge on chip.
+        # The host runs one batched stage-1 pass at a time: requests
+        # arriving at the pass's open instant ride it; later arrivals
+        # queue for the next pass (which opens when this one flushes), so
+        # every request pays at least one full t_cache_cpu and the batch
+        # contents are frozen when the pass starts.
+        self._stage1_pending.append((st, q, self._now))
+        if self._stage1_open is None:
+            self._stage1_open = self._now
+            self._push(self._now + self.cfg.t_cache_cpu, self._stage1_flush)
 
-        def stage1_done(now):
+    def _stage1_flush(self, now=None):
+        open_t = self._stage1_open
+        batch = [e for e in self._stage1_pending if e[2] <= open_t]
+        self._stage1_pending = [
+            e for e in self._stage1_pending if e[2] > open_t
+        ]
+        self._stage1_open = None
+        if self._stage1_pending:  # next pass opens as this one retires
+            self._stage1_open = self._now
+            self._push(self._now + self.cfg.t_cache_cpu, self._stage1_flush)
+        if not batch:
+            return
+        now = self._now
+        queries = [q for _, q, _ in batch]
+        q_embs = np.stack([self.world.embed(q) for q in queries])
+        cands_block = self.cache.stage1_batch(queries, q_embs, now)
+        for (st, q, t0), cands in zip(batch, cands_block):
             st.rec.cache_time += now - t0
-            q_emb = self.world.embed(q)
-            cands = self.cache.stage1(q, q_emb, now)
             if not cands:
                 self.cache.miss_no_candidates()
                 self._go_remote(st)
-                return
+                continue
             if self.mode == "cortex-nojudge":
                 # ANN-only ablation: accept nearest candidate blindly
                 se = cands[0]
@@ -232,50 +267,90 @@ class Engine:
                 st.rec.cache_hits += 1
                 self._after_validated(st, se.key)
                 self._observe(st, se.value, from_cache=True)
-                return
+                continue
             self._judge_request(st, q, cands)
-
-        self._push(self._now + self.cfg.t_cache_cpu, stage1_done)
+        # one dispatch for the whole flush: requests that arrived in the
+        # same stage-1 window ride the same judge micro-batch (dispatching
+        # inside _judge_request would submit solo batches whenever the
+        # judge lane has free slots)
+        self._dispatch_judges()
 
     def _judge_request(self, st: _ReqState, q: str, cands):
-        st.judge_done = False
-        st.judge_timed_out = False
-        t0 = self._now
+        # done/timed_out live on the ENTRY, not the request: a request has
+        # one judge job per round, and a stale timed-out entry from an
+        # earlier round must never be revived by a later round's flags.
+        # snapshot keys/values now: candidates may be evicted (and their
+        # SoA rows reused) while the judge job waits on the accelerator
+        entry = dict(
+            st=st, q=q, cands=cands, t0=self._now,
+            keys=[c.key for c in cands], values=[c.value for c in cands],
+            done=False, timed_out=False,
+        )
+        self._judge_backlog.append(entry)
+        self._push(self._now + self.cfg.judge_timeout,
+                   self._judge_timeout, entry)
+        # no dispatch here — the caller (_stage1_flush) dispatches once
+        # for the whole window so co-arrived requests share a micro-batch
 
-        def judge_done(now):
-            if st.judge_timed_out:
-                return  # request already proceeded as a miss
-            st.judge_done = True
-            st.rec.cache_time += now - t0
-            scores = self.cache.seri.judge.score_pairs(
-                [q] * len(cands), [c.key for c in cands]
+    def _judge_timeout(self, entry):
+        if entry["done"]:
+            return
+        entry["timed_out"] = True
+        self.cache.stats.misses += 1
+        self._go_remote(entry["st"])  # deferred validation = miss (§4.4)
+
+    def _dispatch_judges(self):
+        """Drain the backlog in micro-batches: one accelerator job and one
+        ``score_pairs`` call per batch of up to judge_batch_max requests,
+        with the shared prompt prefill amortized (paper §4.4)."""
+        while self._judge_backlog and self.gpu.judge_admission_ok() and \
+                self.gpu.judge.n_waiting == 0:
+            batch = []
+            while self._judge_backlog and \
+                    len(batch) < self.cfg.judge_batch_max:
+                e = self._judge_backlog.pop(0)
+                if e["timed_out"]:
+                    continue  # already proceeded as a miss
+                batch.append(e)
+            if not batch:
+                return
+            tokens = judge_batch_tokens(
+                self.cfg.judge_tokens, len(batch),
+                self.cfg.judge_batch_marginal,
             )
-            for c, s in zip(cands, scores):
-                self.eval_log.append(EvalRecord(q, c.key, c.value, float(s)))
-            res = self.cache.finalize(q, cands, scores, now)
+            self._submit(
+                self.gpu.judge, tokens,
+                lambda now, b=batch: self._judge_batch_done(b, now),
+            )
+
+    def _judge_batch_done(self, batch, now):
+        live = [e for e in batch if not e["timed_out"]]
+        for e in live:
+            e["done"] = True
+        if not live:
+            return
+        # one flattened judge call for the whole micro-batch
+        flat_q, flat_k = [], []
+        for e in live:
+            flat_q.extend([e["q"]] * len(e["cands"]))
+            flat_k.extend(e["keys"])
+        scores = self.cache.seri.judge.score_pairs(flat_q, flat_k)
+        off = 0
+        for e in live:
+            m = len(e["cands"])
+            sc = scores[off:off + m]
+            off += m
+            st = e["st"]
+            st.rec.cache_time += now - e["t0"]
+            for key, val, s in zip(e["keys"], e["values"], sc):
+                self.eval_log.append(EvalRecord(e["q"], key, val, float(s)))
+            res = self.cache.finalize(e["q"], e["cands"], sc, now)
             if res.hit:
                 st.rec.cache_hits += 1
                 self._after_validated(st, res.se.key)
                 self._observe(st, res.se.value, from_cache=True)
             else:
                 self._go_remote(st)
-
-        def judge_timeout(now):
-            if st.judge_done:
-                return
-            st.judge_timed_out = True
-            self.cache.stats.misses += 1
-            self._go_remote(st)  # deferred validation = miss (§4.4)
-
-        self._judge_backlog.append((self.cfg.judge_tokens, judge_done))
-        self._push(self._now + self.cfg.judge_timeout, judge_timeout)
-        self._dispatch_judges()
-
-    def _dispatch_judges(self):
-        while self._judge_backlog and self.gpu.judge_admission_ok() and \
-                self.gpu.judge.n_waiting == 0:
-            tokens, cb = self._judge_backlog.pop(0)
-            self._submit(self.gpu.judge, tokens, cb)
 
     def _go_remote(self, st: _ReqState):
         q = st.req.query_for_round(st.round)
@@ -398,8 +473,12 @@ class Engine:
                 p_target=self.cfg.p_target, sample_size=n,
                 rng=self.rng,
             )
-            self.cache.seri.tau_lsm = res.tau
-            self.recal_history.append((self._now, res.tau))
+            # hysteresis: one noisy sample window must not swing the
+            # serving threshold — blend toward the new estimate
+            a = self.cfg.recal_smooth
+            tau = (1.0 - a) * self.cache.seri.tau_lsm + a * res.tau
+            self.cache.seri.tau_lsm = tau
+            self.recal_history.append((self._now, tau))
         self._push(self._now + self.cfg.recalibrate_every, lambda now=None: self._recal_tick())
 
     # --------------------------------------------------------- run

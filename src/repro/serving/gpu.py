@@ -166,3 +166,16 @@ class GPU:
         if not self.cfg.colocated:
             return True
         return self.agent.n_waiting == 0
+
+
+def judge_batch_tokens(base: float, m: int, marginal: float) -> float:
+    """Token cost of a judge micro-batch of m requests (paper §4.4).
+
+    Judge jobs are prefill-only classifications over near-identical
+    prompts; co-batching them into one accelerator launch shares the
+    instruction/prompt prefill, so request 2..m each pay only a
+    ``marginal`` fraction of the base cost. m=1 degenerates to the
+    unbatched cost."""
+    if m <= 0:
+        return 0.0
+    return base * (1.0 + marginal * (m - 1))
