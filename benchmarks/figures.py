@@ -180,6 +180,52 @@ def table7_colocation():
              thpt_per_dollar=round(s["thpt_per_dollar"], 3))
 
 
+def federation_sweep(smoke: bool = False):
+    """Cross-region 3-way sweep (DESIGN.md §9): per-region caches alone
+    vs the peered federation vs one shared global cache. Region-skewed
+    workload with a shared-hot overlap, so peering has reuse to capture.
+    ``smoke`` shrinks everything for the CI topology-regression gate."""
+    from repro.data.workloads import region_workloads
+    from repro.data.world import SemanticWorld
+    from repro.serving.federation import FederationRunner
+
+    n_intents = 120 if smoke else 600
+    n_per_region = 40 if smoke else 400
+    n_regions = 2 if smoke else 3
+    world = SemanticWorld(n_intents=n_intents, dim=64, seed=21)
+    streams = region_workloads(
+        world, n_per_region, n_regions, overlap=0.6, seed=22,
+    )
+    results = {}
+    for topo in ("local", "peered", "global"):
+        r = FederationRunner(
+            world=world, region_requests=streams, topology=topo, seed=23,
+        )
+        a = r.run()["aggregate"]
+        results[topo] = a
+        emit(f"federation/{topo}", a["latency_mean"] * 1e6,
+             lat_ms=round(a["latency_mean"] * 1e3, 1),
+             remote_ms=round(a["remote_time_mean"] * 1e3, 1),
+             hit=round(a["hit_rate"], 3),
+             peer_hit=round(a["peer_hit_rate"], 3),
+             transfers=a["peer_transfers"],
+             api=a["api_calls"],
+             cost=round(a["api_cost"], 3))
+    gain = 1 - results["peered"]["remote_time_mean"] / max(
+        results["local"]["remote_time_mean"], 1e-9
+    )
+    emit("federation/peering_gain", 0.0,
+         remote_time_reduction=round(gain, 4))
+    if results["peered"]["remote_time_mean"] >= \
+            results["local"]["remote_time_mean"]:
+        raise SystemExit(
+            "federation regression: peered mean remote_time "
+            f"({results['peered']['remote_time_mean']:.4f}s) is not below "
+            f"local-only ({results['local']['remote_time_mean']:.4f}s)"
+        )
+    return results
+
+
 def recalibration_overhead():
     """§6.6: periodic threshold recalibration cost + drift adaptation."""
     base = run_ds("hotpotqa", "cortex", cache_ratio=0.5, concurrency=8)

@@ -1,9 +1,13 @@
 """Benchmark harness — one function per paper table/figure (DESIGN.md §7).
 Prints ``name,us_per_call,derived`` CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig7,table5]
+  PYTHONPATH=src python -m benchmarks.run [--only fig7,table5] [--smoke]
+
+``--smoke`` shrinks benchmarks that support it (currently the federation
+sweep) to CI-sized problems; regressions still fail the run.
 """
 import argparse
+import inspect
 import sys
 import time
 
@@ -22,6 +26,7 @@ ALL = {
     "table6": figures.table6_lcfu,
     "table7": figures.table7_colocation,
     "recal": figures.recalibration_overhead,
+    "federation": figures.federation_sweep,
     "kernel_ann": kernels_bench.kernel_ann,
     "kernel_flash": kernels_bench.kernel_flash,
     "cache_path": kernels_bench.cache_path_calibration,
@@ -33,6 +38,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(ALL))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny problem sizes (CI regression gate)")
     args = ap.parse_args()
     names = list(ALL) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
@@ -42,7 +49,11 @@ def main() -> None:
             print(f"unknown benchmark {n!r}", file=sys.stderr)
             sys.exit(2)
         t = time.time()
-        ALL[n]()
+        fn = ALL[n]
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            fn(smoke=True)
+        else:
+            fn()
         print(f"# {n} done in {time.time()-t:.1f}s", file=sys.stderr)
     print(f"# all benchmarks done in {time.time()-t0:.1f}s", file=sys.stderr)
 

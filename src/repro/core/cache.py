@@ -76,14 +76,20 @@ class CortexCache:
 
     # ------------------------------------------------------------ lookup
 
+    def account_hit(self, se: SemanticElement, now: float) -> None:
+        """Shared hit bookkeeping — EVERY validated-hit path (full lookup,
+        staged finalize, the engine's ANN-only ablation) must route through
+        here so freq/last_access/hits/prefetch_hits stay comparable across
+        modes."""
+        se.freq += 1
+        se.last_access = now
+        self.stats.hits += 1
+        if se.prefetched and se.freq == 1:
+            self.stats.prefetch_hits += 1
+
     def _account_hit(self, res: SeriResult, now: float) -> None:
         if res.hit:
-            se = res.se
-            se.freq += 1
-            se.last_access = now
-            self.stats.hits += 1
-            if se.prefetched and se.freq == 1:
-                self.stats.prefetch_hits += 1
+            self.account_hit(res.se, now)
         else:
             self.stats.misses += 1
 
@@ -135,11 +141,7 @@ class CortexCache:
                 se = cands[j]
                 if se.se_id not in self.store:  # evicted meanwhile
                     continue
-                se.freq += 1
-                se.last_access = now
-                self.stats.hits += 1
-                if se.prefetched and se.freq == 1:
-                    self.stats.prefetch_hits += 1
+                self.account_hit(se, now)
                 return SeriResult(True, se, len(cands), len(cands), best,
                                   np.zeros(0, np.float32))
         self.stats.misses += 1
@@ -164,9 +166,17 @@ class CortexCache:
         staticity: Optional[int] = None,
         prefetched: bool = False,
         intent: Optional[int] = None,
+        ttl: Optional[float] = None,
+        origin: Optional[int] = None,
     ) -> SemanticElement:
-        staticity = staticity or self.seri.judge.staticity(query)
-        ttl = ttl_from_staticity(staticity, self.max_ttl, self.min_ttl)
+        # `is None`, not truthiness: staticity 0 is a legitimate caller
+        # override and must not trigger a judge re-estimate
+        if staticity is None:
+            staticity = self.seri.judge.staticity(query)
+        if ttl is None:
+            # explicit ttl: federated transfers admit with the SOURCE
+            # entry's remaining lifetime so a copy never outlives its origin
+            ttl = ttl_from_staticity(staticity, self.max_ttl, self.min_ttl)
         self._make_room(size, now)
         if self.seri.index.full:
             self._evict_n(1, now)
@@ -190,6 +200,7 @@ class CortexCache:
             last_access=now,
             prefetched=prefetched,
             intent=intent,
+            origin=origin,
         )
         self.usage += size
         self.stats.insertions += 1
@@ -205,7 +216,8 @@ class CortexCache:
         order (each may trigger eviction that the next must observe), so
         the eviction sequence matches sequential ``insert`` calls."""
         staticities = [
-            it.get("staticity") or self.seri.judge.staticity(it["query"])
+            it["staticity"] if it.get("staticity") is not None
+            else self.seri.judge.staticity(it["query"])
             for it in items
         ]
         out = []
@@ -218,15 +230,29 @@ class CortexCache:
             out.append(self.insert(q, emb, value, now=now, **kw))
         return out
 
-    def contains_semantic(self, query: str, q_emb: np.ndarray,
-                          now: float) -> bool:
-        """Peek (no stats, no freq bump) — used by the prefetcher."""
+    def peek_semantic(self, query: str, q_emb: np.ndarray,
+                      now: float) -> Optional[SemanticElement]:
+        """Best live stage-1 match WITHOUT any bookkeeping (no stats, no
+        freq bump, no judge). Used by the prefetcher's presence check and
+        by federation peer peeks. NOTE: this trusts the ANN gate alone —
+        a peer transfer admits the value under the NEW query's key, so a
+        stage-1 false positive at the peer (e.g. a confusable pair above
+        τ_sim) propagates and surfaces as an info_accuracy loss, exactly
+        like any unjudged admission."""
         se_ids, _ = self.seri.index.search(
             q_emb, self.seri.top_k, self.seri.tau_sim
         )
-        return any(
-            i in self.store and not self.store[i].expired(now) for i in se_ids
-        )
+        for i in se_ids:  # similarity-descending
+            if i in self.store:
+                se = self.store[i]
+                if not se.expired(now):
+                    return se
+        return None
+
+    def contains_semantic(self, query: str, q_emb: np.ndarray,
+                          now: float) -> bool:
+        """Peek (no stats, no freq bump) — used by the prefetcher."""
+        return self.peek_semantic(query, q_emb, now) is not None
 
     # ------------------------------------------------------------ evict
 

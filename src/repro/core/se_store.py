@@ -54,13 +54,16 @@ class SEStore:
         self.key = np.empty(capacity, object)
         self.value = np.empty(capacity, object)
         self.intent = np.empty(capacity, object)
+        # provenance: region id the value was transferred from (None =
+        # fetched from the origin service by this cache's own region)
+        self.origin = np.empty(capacity, object)
         self.id2row: dict[int, int] = {}
 
     # ---------------------------------------------------------- mutation
 
     def add(self, row: int, se_id: int, *, key, value, staticity, cost,
             latency, size, created_at, expires_at, freq, last_access,
-            prefetched, intent) -> SemanticElement:
+            prefetched, intent, origin=None) -> SemanticElement:
         self.se_id[row] = se_id
         self.freq[row] = freq
         self.size[row] = size
@@ -75,6 +78,7 @@ class SEStore:
         self.key[row] = key
         self.value[row] = value
         self.intent[row] = intent
+        self.origin[row] = origin
         self.id2row[se_id] = row
         return SemanticElement(self, row)
 
@@ -87,6 +91,7 @@ class SEStore:
         self.key[row] = None
         self.value[row] = None
         self.intent[row] = None
+        self.origin[row] = None
         return size
 
     # ------------------------------------------------------------ views

@@ -66,6 +66,12 @@ class SemanticElement:
         return self._store.intent[self._row]
 
     @property
+    def origin(self) -> Optional[int]:
+        """Provenance: region id this value was transferred from, or None
+        if this cache's own region fetched it from the origin service."""
+        return self._store.origin[self._row]
+
+    @property
     def row(self) -> int:
         return self._row
 

@@ -196,6 +196,78 @@ def swe_workload(
     return out
 
 
+def region_workloads(
+    world: SemanticWorld,
+    n_per_region: int,
+    n_regions: int,
+    *,
+    overlap: float = 0.5,
+    shared_frac: float = 0.3,
+    zipf_s: float = 0.99,
+    rate: float = 2.0,
+    n_paraphrases: int = 100,
+    n_rounds: int = 2,
+    seed: int = 0,
+) -> list[list[Request]]:
+    """Region-skewed request streams for the federation experiments
+    (DESIGN.md §9).
+
+    The intent space splits into one *shared* pool (``shared_frac`` of all
+    intents — globally hot knowledge every region asks about) and
+    ``n_regions`` disjoint *private* pools (region-local interest). Each
+    request draws from the shared pool with probability ``overlap``, else
+    from its region's private pool; both draws are Zipf(``zipf_s``) within
+    the pool. ``overlap`` is therefore the knob peering exploits: at 0 the
+    regions are disjoint and peeking siblings is pure overhead; at 1 every
+    region serves the same hot set and a sibling has almost everything.
+
+    Arrivals are independent per-region Poisson(``rate``); request ids are
+    globally unique across regions (records can be merged), and each
+    request keeps its own session id so per-region prefetchers learn
+    uncontaminated transition chains.
+    """
+    if not 0.0 <= overlap <= 1.0:
+        raise ValueError("overlap must be in [0, 1]")
+    rng = np.random.default_rng(seed)
+    n = world.n_intents
+    perm = rng.permutation(n)
+    n_shared = max(int(n * shared_frac), 1)
+    shared = perm[:n_shared]
+    private_all = perm[n_shared:]
+    if len(private_all) < n_regions:
+        raise ValueError("need at least one private intent per region")
+    privates = np.array_split(private_all, n_regions)
+    p_shared = _zipf_probs(len(shared), zipf_s)
+    out: list[list[Request]] = []
+    rid = 0
+    for r in range(n_regions):
+        priv = privates[r]
+        p_priv = _zipf_probs(len(priv), zipf_s)
+        reqs = []
+        t = 0.0
+        for _ in range(n_per_region):
+            t += rng.exponential(1.0 / rate)
+            if rng.random() < overlap:
+                intent = int(shared[rng.choice(len(shared), p=p_shared)])
+            else:
+                intent = int(priv[rng.choice(len(priv), p=p_priv)])
+            rounds = []
+            for rr in range(n_rounds):
+                it = intent
+                if rr > 0 and rng.random() < 0.3:
+                    it = (intent + 1) % n
+                rounds.append(
+                    world.query(it, int(rng.integers(0, n_paraphrases)))
+                )
+            reqs.append(
+                Request(rid, t, rounds[0], session=rid, n_rounds=n_rounds,
+                        round_queries=tuple(rounds))
+            )
+            rid += 1
+        out.append(reqs)
+    return out
+
+
 def closed_loop(requests: list[Request], concurrency: int) -> list[Request]:
     """Strip arrival times for closed-loop replay at fixed concurrency —
     the engine dispatches the next request when a slot frees (Fig 10)."""

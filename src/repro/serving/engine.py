@@ -16,12 +16,16 @@ shared prompt prefill amortized across co-batched requests (§4.4).
 
 Modes: "vanilla" (no cache), "exact" (exact-match KV cache),
 "cortex" (full), "cortex-nojudge" (ANN-only ablation, Fig 13).
+
+Events live on a :class:`~repro.serving.clock.VirtualClock`. A solo
+engine owns a private clock; under federation (DESIGN.md §9) every
+per-region engine shares ONE clock, and an optional ``router`` redirects
+cache misses through the cross-region peek/transfer path before the
+origin WAN fetch.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 from typing import Any, Optional
 
 import numpy as np
@@ -31,6 +35,7 @@ from repro.core.prefetch import MarkovPrefetcher
 from repro.core.recalibrate import EvalRecord, recalibrate
 from repro.data.workloads import Request
 from repro.data.world import SemanticWorld
+from repro.serving.clock import VirtualClock
 from repro.serving.gpu import GPU, GPUConfig, judge_batch_tokens
 from repro.serving.remote import RemoteDataService
 
@@ -44,6 +49,7 @@ class EngineConfig:
     judge_timeout: float = 0.25         # deferred validation ⇒ miss
     judge_batch_max: int = 8            # judge micro-batch size cap (§4.4)
     judge_batch_marginal: float = 0.5   # marginal prefill cost per co-batched req
+    cache_access_latency: float = 0.0   # RTT to a non-local (global) cache
     closed_loop: Optional[int] = None   # concurrency, or None = open loop
     prefetch: bool = True
     prefetch_confidence: float = 0.55
@@ -71,6 +77,7 @@ class RequestRecord:
     rounds: int = 0
     cache_hits: int = 0
     remote_calls: int = 0
+    peer_transfers: int = 0   # remote calls served by a sibling region
     info_correct: bool = True
     em_correct: bool = False
 
@@ -99,12 +106,19 @@ class ExactCache:
     def lookup(self, query: str, now: float):
         self.lookups += 1
         ent = self.d.get(query)
-        if ent and now < ent[1]:
-            self.hits += 1
+        if ent is None:
+            return None
+        if now >= ent[1]:
+            # expired: reclaim the bytes NOW — leaving the entry resident
+            # kept its size counted in `usage` forever, silently shrinking
+            # effective capacity with every TTL lapse
+            self.usage -= self.d.pop(query)[2]
             self.order.remove(query)
-            self.order.append(query)
-            return ent[0]
-        return None
+            return None
+        self.hits += 1
+        self.order.remove(query)
+        self.order.append(query)
+        return ent[0]
 
     def insert(self, query: str, value, size: int, now: float):
         if query in self.d:
@@ -136,6 +150,9 @@ class Engine:
         remote: Optional[RemoteDataService] = None,
         gpu: Optional[GPU] = None,
         cfg: Optional[EngineConfig] = None,
+        clock: Optional[VirtualClock] = None,
+        router=None,
+        region_id: int = 0,
     ):
         self.world = world
         self.requests = requests
@@ -145,6 +162,12 @@ class Engine:
         self.remote = remote or RemoteDataService()
         self.gpu = gpu or GPU(GPUConfig())
         self.cfg = cfg or EngineConfig()
+        self.clock = clock or VirtualClock()
+        # Federation seam: when set, cache misses route through the
+        # cross-region peek/transfer path instead of going straight to the
+        # origin service (serving/federation.py).
+        self.router = router
+        self.region_id = region_id
         self.rng = np.random.default_rng(self.cfg.seed)
         self.prefetcher = MarkovPrefetcher(
             confidence=self.cfg.prefetch_confidence
@@ -153,9 +176,6 @@ class Engine:
         self.eval_log: list[EvalRecord] = []
         self.recal_history: list[tuple[float, float]] = []
         self.recal_cost = 0.0
-        self._events: list = []
-        self._seq = itertools.count()
-        self._now = 0.0
         self._pending = list(requests)
         self._active = 0
         self._judge_backlog: list[dict] = []
@@ -167,8 +187,16 @@ class Engine:
 
     # ------------------------------------------------------------ events
 
+    @property
+    def _now(self) -> float:
+        return self.clock.now
+
+    @property
+    def done(self) -> bool:
+        return self._done >= len(self.requests)
+
     def _push(self, t: float, fn, *args):
-        heapq.heappush(self._events, (t, next(self._seq), fn, args))
+        self.clock.push(t, fn, *args)
 
     def _push_lane_event(self, lane):
         nxt = lane.next_completion()
@@ -234,7 +262,13 @@ class Engine:
         self._stage1_pending.append((st, q, self._now))
         if self._stage1_open is None:
             self._stage1_open = self._now
-            self._push(self._now + self.cfg.t_cache_cpu, self._stage1_flush)
+            self._push(self._now + self._stage1_latency(), self._stage1_flush)
+
+    def _stage1_latency(self) -> float:
+        """Host embed+ANN time, plus the network RTT when the cache is a
+        shared global one homed in another region (federation's
+        single-global-cache baseline, DESIGN.md §9)."""
+        return self.cfg.t_cache_cpu + self.cfg.cache_access_latency
 
     def _stage1_flush(self, now=None):
         open_t = self._stage1_open
@@ -245,7 +279,7 @@ class Engine:
         self._stage1_open = None
         if self._stage1_pending:  # next pass opens as this one retires
             self._stage1_open = self._now
-            self._push(self._now + self.cfg.t_cache_cpu, self._stage1_flush)
+            self._push(self._now + self._stage1_latency(), self._stage1_flush)
         if not batch:
             return
         now = self._now
@@ -259,11 +293,11 @@ class Engine:
                 self._go_remote(st)
                 continue
             if self.mode == "cortex-nojudge":
-                # ANN-only ablation: accept nearest candidate blindly
+                # ANN-only ablation: accept nearest candidate blindly —
+                # but through the SHARED hit accounting, so prefetch_hits
+                # and freq bookkeeping stay comparable with full cortex
                 se = cands[0]
-                se.freq += 1
-                se.last_access = now
-                self.cache.stats.hits += 1
+                self.cache.account_hit(se, now)
                 st.rec.cache_hits += 1
                 self._after_validated(st, se.key)
                 self._observe(st, se.value, from_cache=True)
@@ -354,38 +388,64 @@ class Engine:
 
     def _go_remote(self, st: _ReqState):
         q = st.req.query_for_round(st.round)
+        st.rec.remote_calls += 1
+        t0 = self._now
+        if self.router is not None:
+            # federation: peek sibling regions before the origin WAN fetch
+            self.router.route(self, st, q, t0)
+            return
         out = self.remote.fetch(
             self._now,
             latency_mult=self.world.latency_mult(q),
             cost_mult=self.world.cost_mult(q),
         )
-        st.rec.remote_calls += 1
-        t0 = self._now
+        self._push(
+            out.finish,
+            lambda now: self.remote_done(st, q, t0, now, value=None,
+                                         cost=out.cost),
+        )
 
-        def fetched(now):
-            st.rec.remote_time += now - t0
+    def remote_done(self, st: _ReqState, q: str, t0: float, now: float, *,
+                    value=None, cost: float = 0.0,
+                    ttl: Optional[float] = None,
+                    staticity: Optional[int] = None,
+                    origin: Optional[int] = None,
+                    size: Optional[int] = None):
+        """Complete one remote resolution (origin fetch or federated peer
+        transfer): admit into the local cache and resume the request.
+
+        ``value=None`` means "fetched from the origin" (ground truth from
+        the world); a peer transfer passes the sibling's cached value,
+        which — like any cache hit — may be stale or semantically wrong,
+        and flows into accuracy accounting the same way."""
+        st.rec.remote_time += now - t0
+        if value is None:
             value = self.world.fetch(q)
+        else:
+            st.rec.peer_transfers += 1
+        if size is None:
             size = self.world.value_size(q)
-            if self.mode in ("cortex", "cortex-nojudge") and self.cache is not None:
-                q_emb = self.world.embed(q)
-                self.cache.insert(
-                    q, q_emb, value, now=now, cost=out.cost,
-                    latency=now - t0, size=size,
-                    intent=self.world.intent_of(q),
-                )
-                self._after_validated(st, q)
-            elif self.mode == "exact" and self.exact is not None:
-                self.exact.insert(q, value, size, now)
-            self._observe(st, value, from_cache=False)
-
-        self._push(out.finish, fetched)
+        if self.mode in ("cortex", "cortex-nojudge") and self.cache is not None:
+            q_emb = self.world.embed(q)
+            self.cache.insert(
+                q, q_emb, value, now=now, cost=cost,
+                latency=now - t0, size=size,
+                intent=self.world.intent_of(q),
+                ttl=ttl, staticity=staticity, origin=origin,
+            )
+            self._after_validated(st, q)
+        elif self.mode == "exact" and self.exact is not None:
+            self.exact.insert(q, value, size, now)
+        self._observe(st, value, from_cache=False)
 
     def _after_validated(self, st: _ReqState, key: str):
         """Feed the prefetcher with the validated intent stream."""
         if not self.cfg.prefetch or self.mode != "cortex":
             return
         intent = self.world.intent_of(key)
-        self.prefetcher.observe(intent)
+        # keyed by session so interleaved concurrent requests don't
+        # cross-contaminate the learned transition table
+        self.prefetcher.observe(intent, key=st.req.session)
         pred = self.prefetcher.predict(intent)
         if pred is None:
             return
@@ -431,8 +491,9 @@ class Engine:
     def _complete(self, st: _ReqState):
         rec = st.rec
         rec.t_done = self._now
-        rec.latency = self._now - rec.arrival if self.cfg.closed_loop is None \
-            else self._now - rec.arrival  # arrival set at dispatch for CL
+        # closed-loop arrivals are re-stamped at dispatch, so this single
+        # expression is correct for both loop disciplines
+        rec.latency = self._now - rec.arrival
         rec.info_correct = all(st.info_values)
         p = self.cfg.em_p_base if rec.info_correct else self.cfg.em_p_wrong
         rec.em_correct = bool(self.rng.random() < p)
@@ -460,7 +521,6 @@ class Engine:
     def _recal_tick(self):
         if self.eval_log:
             n = min(self.cfg.recal_samples, len(self.eval_log))
-            cost_calls = n
 
             def fetch_gt(q):
                 self.recal_cost += self.remote.cost_per_call
@@ -490,7 +550,10 @@ class Engine:
             req = dataclasses.replace(req, arrival=self._now)
             self._start_request(req)
 
-    def run(self) -> dict:
+    def prepare(self) -> None:
+        """Schedule arrivals (and the recal timer) without running the
+        loop — the federation runner prepares every region's engine, then
+        drives their SHARED clock itself."""
         if self.cfg.closed_loop is not None:
             self._dispatch_closed_loop()
         else:
@@ -500,10 +563,10 @@ class Engine:
         if self.cfg.recalibrate_every and self.mode == "cortex":
             self._push(self.cfg.recalibrate_every, lambda now=None: self._recal_tick())
 
-        while self._events and self._done < len(self.requests):
-            t, _, fn, args = heapq.heappop(self._events)
-            self._now = max(self._now, t)
-            fn(*args) if args else fn(self._now)
+    def run(self) -> dict:
+        self.prepare()
+        while self.clock.pending and not self.done:
+            self.clock.step()
         return self.summary()
 
     # --------------------------------------------------------- metrics
@@ -538,6 +601,10 @@ class Engine:
             "agent_time_mean": float(np.mean([r.agent_time for r in recs])),
             "cache_time_mean": float(np.mean([r.cache_time for r in recs])),
             "remote_time_mean": float(np.mean([r.remote_time for r in recs])),
+            "remote_calls_per_req": float(
+                np.mean([r.remote_calls for r in recs])
+            ),
+            "peer_transfers": int(sum(r.peer_transfers for r in recs)),
             "api_calls": d_calls,
             "api_attempts": d_attempts,
             "retry_ratio": d_retries / d_attempts if d_attempts else 0.0,

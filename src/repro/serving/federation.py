@@ -1,0 +1,391 @@
+"""Cross-region cache federation (DESIGN.md §9).
+
+Cortex is a *cross-region* architecture: the agent cluster and the data
+source sit in different regions, and the cache's whole purpose is to keep
+knowledge near the requester. This module adds the missing topology
+dimension — several agent regions, each with its own local
+:class:`~repro.core.cache.CortexCache` and origin
+:class:`~repro.serving.remote.RemoteDataService` (region-specific WAN
+latency / cost / QPM), joined by a :class:`Federation` router.
+
+On a local cache miss the router broadcasts a *semantic peek* to every
+sibling region: a probe flies one half-RTT, runs a stage-1
+(``peek_semantic``) search against the sibling's cache at the virtual
+instant it arrives, and the response carries a lease (value, absolute
+expiry, staticity) back. The nearest positive response wins — responses
+arrive in RTT order on the shared clock, so "first positive response"
+IS "nearest holder" — and a transfer admits the value into the local
+cache with
+
+  * **provenance** — ``se.origin`` records the source region;
+  * **adjusted TTL** — the copy expires at the SOURCE entry's absolute
+    expiry, so federation never extends a value's lifetime;
+  * **transfer economics** — admission cost is the (cheap) inter-region
+    transfer cost, not the origin call price, so LCFU correctly treats
+    federated copies as cheap to re-obtain.
+
+Only when every sibling NAKs (or the lease would expire in flight) does
+the request fall back to its region's origin WAN fetch, paying its own
+rate limiter. Three topologies are benchmarked (``--only federation``):
+per-region caches without peering ("local"), the full federation
+("peered"), and one shared global cache homed in region 0 that remote
+regions reach at inter-region RTT ("global").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.cache import CortexCache, make_cache
+from repro.core.judge import OracleJudge
+from repro.data.workloads import Request
+from repro.data.world import SemanticWorld
+from repro.serving.clock import VirtualClock
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.gpu import GPU, GPUConfig
+from repro.serving.remote import RemoteDataService
+
+
+@dataclasses.dataclass
+class RegionConfig:
+    """One agent region: its WAN link to the origin data service and the
+    sizing of its local cache slice."""
+
+    name: str = "region"
+    wan_lat_lo: float = 0.3     # origin WAN latency band (paper §2.2)
+    wan_lat_hi: float = 0.5
+    wan_cost: float = 0.005     # $ per origin call
+    qpm: Optional[float] = 100.0  # origin rate limit (per-region bucket)
+    cache_ratio: float = 0.4    # capacity as fraction of world footprint
+
+
+@dataclasses.dataclass
+class Region:
+    """Region bundle the router sees: local cache + origin service."""
+
+    rid: int
+    cfg: RegionConfig
+    cache: CortexCache
+    remote: RemoteDataService
+    gpu: GPU
+    engine: Optional[Engine] = None
+
+
+@dataclasses.dataclass
+class FederationStats:
+    peeks: int = 0            # miss broadcasts issued
+    probes: int = 0           # per-peer probe messages
+    peer_hits: int = 0        # broadcasts resolved by a sibling transfer
+    peer_misses: int = 0      # broadcasts that fell back to origin
+    transfers: int = 0
+    transfer_bytes: int = 0
+    transfer_cost: float = 0.0
+    expired_leases: int = 0   # positive peeks whose lease died in flight
+    origin_fetches: int = 0
+
+
+@dataclasses.dataclass
+class _Lease:
+    """Snapshot a positive peek response carries home (the source pins
+    the entry for the transfer, so eviction races are not modelled)."""
+
+    value: Any
+    expires_at: float
+    staticity: int
+    size: int
+
+
+class Federation:
+    """Router over a set of regions sharing one virtual clock.
+
+    ``rtt`` is a scalar (uniform mesh) or an (n, n) matrix of inter-region
+    round-trip times. Transfers take one response half-RTT plus
+    ``size / bandwidth`` serialization, and cost ``transfer_cost`` —
+    an order of magnitude under the origin call price (egress, not API).
+    """
+
+    def __init__(
+        self,
+        regions: list[Region],
+        clock: VirtualClock,
+        *,
+        rtt: float | np.ndarray = 0.08,
+        transfer_cost: float = 5e-4,
+        bandwidth: float = 50e6,   # bytes/s on inter-region links
+        peering: bool = True,
+    ):
+        self.regions = regions
+        self.clock = clock
+        n = len(regions)
+        r = np.asarray(rtt, dtype=np.float64)
+        if r.ndim == 0:
+            r = np.full((n, n), float(r))
+            np.fill_diagonal(r, 0.0)
+        if r.shape != (n, n):
+            raise ValueError(f"rtt matrix must be ({n}, {n})")
+        self.rtt_matrix = r
+        self.transfer_cost = transfer_cost
+        self.bandwidth = bandwidth
+        self.peering = peering
+        self.stats = FederationStats()
+
+    def rtt(self, a: int, b: int) -> float:
+        return float(self.rtt_matrix[a, b])
+
+    # ------------------------------------------------------------ routing
+
+    def route(self, engine: Engine, st, q: str, t0: float) -> None:
+        """Resolve a local miss: broadcast peek -> nearest-holder transfer
+        -> origin fallback. Every hop is a clock event, so sibling caches
+        are observed at the exact virtual instant the probe arrives."""
+        region = self.regions[engine.region_id]
+        peers = [p for p in self.regions if p.rid != region.rid]
+        if not self.peering or not peers:
+            self._origin(engine, st, q, t0)
+            return
+        self.stats.peeks += 1
+        q_emb = engine.world.embed(q)
+        # one shared decision cell per broadcast: first positive response
+        # claims it; the last NAK triggers the origin fallback
+        state = {"decided": False, "pending": len(peers)}
+        for peer in peers:
+            rtt = self.rtt(region.rid, peer.rid)
+            self.stats.probes += 1
+            self.clock.push(
+                t0 + rtt / 2.0, self._probe,
+                engine, st, q, q_emb, t0, peer, rtt, state,
+            )
+
+    def _probe(self, engine, st, q, q_emb, t0, peer, rtt, state) -> None:
+        """Probe arrives at the sibling: stage-1 peek against its cache
+        as of NOW (no judge, no stats mutation on the peer)."""
+        lease = None
+        if not state["decided"]:  # decided = probe logically cancelled
+            se = peer.cache.peek_semantic(q, q_emb, self.clock.now)
+            if se is not None:
+                lease = _Lease(
+                    value=se.value,
+                    expires_at=float(se.expires_at),
+                    staticity=int(se.staticity),
+                    size=int(se.size),
+                )
+        self.clock.push(
+            t0 + rtt, self._response,
+            engine, st, q, t0, peer, rtt, lease, state,
+        )
+
+    def _response(self, engine, st, q, t0, peer, rtt, lease, state) -> None:
+        if state["decided"]:
+            return
+        now = self.clock.now
+        state["pending"] -= 1
+        if lease is not None:
+            t_arrive = now + rtt / 2.0 + lease.size / self.bandwidth
+            if lease.expires_at > t_arrive:
+                state["decided"] = True
+                self.stats.peer_hits += 1
+                self.stats.transfers += 1
+                self.stats.transfer_bytes += lease.size
+                self.stats.transfer_cost += self.transfer_cost
+                ttl = lease.expires_at - t_arrive
+                self.clock.push(
+                    t_arrive,
+                    lambda now2: engine.remote_done(
+                        st, q, t0, now2,
+                        value=lease.value, cost=self.transfer_cost,
+                        ttl=ttl, staticity=lease.staticity,
+                        origin=peer.rid,
+                        # admit the bytes actually moved: an ANN match
+                        # across intents can have a different payload
+                        # size than the local query's own value
+                        size=lease.size,
+                    ),
+                )
+                return
+            self.stats.expired_leases += 1
+        if state["pending"] == 0:
+            self.stats.peer_misses += 1
+            self._origin(engine, st, q, t0)
+
+    def _origin(self, engine, st, q, t0) -> None:
+        """Fall back to the region's own origin WAN fetch (its own rate
+        limiter, its own latency band)."""
+        self.stats.origin_fetches += 1
+        out = engine.remote.fetch(
+            self.clock.now,
+            latency_mult=engine.world.latency_mult(q),
+            cost_mult=engine.world.cost_mult(q),
+        )
+        self.clock.push(
+            out.finish,
+            lambda now2: engine.remote_done(st, q, t0, now2, value=None,
+                                            cost=out.cost),
+        )
+
+
+class FederationRunner:
+    """Build + run one multi-region experiment on a shared virtual clock.
+
+    ``topology``:
+      * ``"local"``  — per-region caches, no peering (each region alone);
+      * ``"peered"`` — per-region caches + the Federation router;
+      * ``"global"`` — ONE shared cache homed in region 0, remote regions
+        pay ``rtt(r, 0)`` on every stage-1 access. Total cache bytes
+        match the other topologies (n × per-region slice), so the sweep
+        isolates *placement*, not capacity.
+
+    Every stochastic component is seeded per region, so two runs with the
+    same arguments produce identical summaries — and because all regions
+    share one clock (seq-tie-broken heap), the interleaving itself is
+    deterministic regardless of region count.
+    """
+
+    def __init__(
+        self,
+        *,
+        world: SemanticWorld,
+        region_requests: list[list[Request]],
+        topology: str = "peered",
+        region_cfgs: Optional[list[RegionConfig]] = None,
+        rtt: float | np.ndarray = 0.08,
+        transfer_cost: float = 5e-4,
+        bandwidth: float = 50e6,
+        judge_acc: float = 0.98,
+        engine_cfg: Optional[EngineConfig] = None,
+        gpu_cfg: Optional[GPUConfig] = None,
+        seed: int = 0,
+    ):
+        if topology not in ("local", "peered", "global"):
+            raise ValueError(topology)
+        n = len(region_requests)
+        if region_cfgs is None:
+            region_cfgs = [RegionConfig(name=f"r{i}") for i in range(n)]
+        if len(region_cfgs) != n:
+            raise ValueError("one RegionConfig per request stream")
+        self.world = world
+        self.topology = topology
+        self.clock = VirtualClock()
+        footprint = int(world._sizes.sum())
+        base_cfg = engine_cfg or EngineConfig()
+
+        self.regions: list[Region] = []
+        shared_cache = None
+        if topology == "global":
+            judge = OracleJudge(world, accuracy=judge_acc, seed=seed + 7)
+            shared_cache = make_cache(
+                capacity_bytes=sum(
+                    int(rc.cache_ratio * footprint) for rc in region_cfgs
+                ),
+                dim=world.dim, judge=judge,
+            )
+        for rid, rc in enumerate(region_cfgs):
+            if shared_cache is not None:
+                cache = shared_cache
+            else:
+                judge = OracleJudge(
+                    world, accuracy=judge_acc, seed=seed + 101 * (rid + 1)
+                )
+                cache = make_cache(
+                    capacity_bytes=int(rc.cache_ratio * footprint),
+                    dim=world.dim, judge=judge,
+                )
+            remote = RemoteDataService(
+                lat_lo=rc.wan_lat_lo, lat_hi=rc.wan_lat_hi,
+                cost_per_call=rc.wan_cost, qpm=rc.qpm,
+                seed=seed + 13 * (rid + 1),
+            )
+            gpu = GPU(gpu_cfg or GPUConfig())
+            self.regions.append(Region(rid, rc, cache, remote, gpu))
+
+        self.federation = Federation(
+            self.regions, self.clock, rtt=rtt,
+            transfer_cost=transfer_cost, bandwidth=bandwidth,
+            peering=(topology == "peered"),
+        )
+        for region, reqs in zip(self.regions, region_requests):
+            cfg = dataclasses.replace(
+                base_cfg,
+                seed=seed + 29 * (region.rid + 1),
+                cache_access_latency=(
+                    self.federation.rtt(region.rid, 0)
+                    if topology == "global" else 0.0
+                ),
+            )
+            region.engine = Engine(
+                world=world,
+                requests=reqs,
+                mode="cortex",
+                cache=region.cache,
+                remote=region.remote,
+                gpu=region.gpu,
+                cfg=cfg,
+                clock=self.clock,
+                router=(self.federation if topology == "peered" else None),
+                region_id=region.rid,
+            )
+
+    @property
+    def engines(self) -> list[Engine]:
+        return [r.engine for r in self.regions]
+
+    def run(self) -> dict:
+        for e in self.engines:
+            e.prepare()
+        while self.clock.pending and not all(e.done for e in self.engines):
+            self.clock.step()
+        return self.summary()
+
+    # ----------------------------------------------------------- metrics
+
+    def _caches(self) -> list[CortexCache]:
+        """Distinct cache objects (the global topology shares one)."""
+        return list({id(r.cache): r.cache for r in self.regions}.values())
+
+    def summary(self) -> dict:
+        per_region = {
+            r.cfg.name: r.engine.summary() for r in self.regions
+        }
+        recs = [rec for e in self.engines for rec in e.records]
+        lat = np.array([r.latency for r in recs])
+        fs = self.federation.stats
+        agg = {
+            "topology": self.topology,
+            "n": len(recs),
+            "latency_mean": float(lat.mean()),
+            "latency_p99": float(np.percentile(lat, 99)),
+            "remote_time_mean": float(
+                np.mean([r.remote_time for r in recs])
+            ),
+            "cache_time_mean": float(
+                np.mean([r.cache_time for r in recs])
+            ),
+            "cache_hits": int(sum(r.cache_hits for r in recs)),
+            "hit_rate": _ratio(
+                sum(c.stats.hits for c in self._caches()),
+                sum(c.stats.lookups for c in self._caches()),
+            ),
+            "peer_transfers": int(sum(r.peer_transfers for r in recs)),
+            "api_calls": sum(r.remote.calls for r in self.regions),
+            "api_cost": float(
+                sum(r.remote.total_cost for r in self.regions)
+                + fs.transfer_cost
+            ),
+            "retry_ratio": _ratio(
+                sum(r.remote.retries for r in self.regions),
+                sum(r.remote.attempts for r in self.regions),
+            ),
+            "info_accuracy": float(
+                np.mean([r.info_correct for r in recs])
+            ),
+            "peeks": fs.peeks,
+            "peer_hit_rate": _ratio(fs.peer_hits, fs.peeks),
+            "transfer_bytes": fs.transfer_bytes,
+            "expired_leases": fs.expired_leases,
+        }
+        return {"aggregate": agg, "regions": per_region}
+
+
+def _ratio(a, b) -> float:
+    return a / b if b else 0.0

@@ -18,6 +18,14 @@ class TokenBucket:
         self.t_last = 0.0
 
     def _refill(self, now: float):
+        # Clamp to monotonic time: interleaved fetches resolve future
+        # retry instants (fetch() advances its local `t` through backoff),
+        # so a later-issued fetch can legally arrive with an *earlier*
+        # timestamp. Refilling with a negative dt would subtract tokens
+        # and drag t_last backwards (double-crediting the next refill);
+        # out-of-order callers simply see the bucket as of t_last.
+        if now <= self.t_last:
+            return
         self.tokens = min(
             self.capacity, self.tokens + (now - self.t_last) * self.rate
         )

@@ -1,5 +1,6 @@
 """Hypothesis property tests on the Cortex cache invariants."""
 import numpy as np
+import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -108,6 +109,48 @@ def test_lcfu_evicts_lowest_score():
         assert any(
             scores[i] >= max_evicted for i in surviving
         )
+
+
+def test_insert_honors_explicit_staticity_zero():
+    """Regression: `staticity or judge.staticity(...)` re-estimated when a
+    caller passed a legitimate 0 — the guard must be `is None`."""
+    cache = fresh_cache()
+    q = WORLD.query(3, 0)
+    se = cache.insert(q, WORLD.embed(q), WORLD.fetch(q), now=0.0,
+                      cost=0.005, latency=0.4, size=100, staticity=0)
+    assert se.staticity == 0
+    # staticity 0 clamps to the shortest TTL class
+    assert se.expires_at == pytest.approx(
+        ttl_from_staticity(0, cache.max_ttl, cache.min_ttl)
+    )
+    # same guard on the batched path
+    [se2] = cache.insert_batch(
+        [dict(query=WORLD.query(4, 0), q_emb=WORLD.embed(WORLD.query(4, 0)),
+              value="v", cost=0.005, latency=0.4, size=100, staticity=0)],
+        now=0.0,
+    )
+    assert se2.staticity == 0
+    # None still delegates to the judge (world ground truth >= 1)
+    se3 = cache.insert(WORLD.query(5, 0), WORLD.embed(WORLD.query(5, 0)),
+                       "v", now=0.0, cost=0.005, latency=0.4, size=100)
+    assert se3.staticity == WORLD.staticity(WORLD.query(5, 0)) >= 1
+
+
+def test_shared_hit_accounting_counts_prefetch_hits():
+    """account_hit is the single bookkeeping path for every validated-hit
+    flavor (full lookup, staged finalize, the engine's nojudge ablation):
+    a prefetched entry's first confirmed hit must bump prefetch_hits."""
+    cache = fresh_cache()
+    q = WORLD.query(6, 0)
+    se = cache.insert(q, WORLD.embed(q), WORLD.fetch(q), now=0.0,
+                      cost=0.005, latency=0.4, size=100, prefetched=True)
+    assert se.freq == 0
+    cache.account_hit(se, now=1.0)
+    assert cache.stats.prefetch_hits == 1
+    assert cache.stats.hits == 1
+    assert se.freq == 1 and se.last_access == 1.0
+    cache.account_hit(se, now=2.0)
+    assert cache.stats.prefetch_hits == 1     # only the first hit counts
 
 
 def test_ttl_from_staticity_monotone():

@@ -1,0 +1,256 @@
+"""Cross-region federation tests (DESIGN.md §9): the router's
+local-hit / peer-hit / origin-fetch decision tree, transfer admission
+(provenance + adjusted TTL), shared-clock determinism, and the
+region-skewed workload generator."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.cache import make_cache
+from repro.core.judge import OracleJudge
+from repro.data.workloads import region_workloads
+from repro.data.world import SemanticWorld
+from repro.serving.clock import VirtualClock
+from repro.serving.engine import EngineConfig
+from repro.serving.federation import (
+    Federation, FederationRunner, Region, RegionConfig,
+)
+from repro.serving.remote import RemoteDataService
+
+WORLD = SemanticWorld(n_intents=60, dim=32, seed=3)
+
+
+# --------------------------------------------------------------- harness
+
+
+class _StubEngine:
+    """Minimal engine surface the router touches: lets the decision-tree
+    tests drive Federation.route with exact, hand-chosen timing."""
+
+    def __init__(self, world, remote, region_id):
+        self.world = world
+        self.remote = remote
+        self.region_id = region_id
+        self.results = []
+
+    def remote_done(self, st, q, t0, now, **kw):
+        self.results.append(dict(q=q, t0=t0, now=now, **kw))
+
+
+def _mk_region(rid, seed=0):
+    judge = OracleJudge(WORLD, accuracy=1.0, seed=seed + rid)
+    cache = make_cache(capacity_bytes=500_000, dim=WORLD.dim, judge=judge,
+                       index_capacity=128)
+    remote = RemoteDataService(qpm=None, seed=seed + 50 + rid)
+    return Region(rid, RegionConfig(name=f"r{rid}"), cache, remote, gpu=None)
+
+
+def _mk_federation(n_regions=2, rtt=0.08, bandwidth=1e9, **kw):
+    clock = VirtualClock()
+    regions = [_mk_region(i) for i in range(n_regions)]
+    fed = Federation(regions, clock, rtt=rtt, bandwidth=bandwidth, **kw)
+    engines = [
+        _StubEngine(WORLD, regions[i].remote, i) for i in range(n_regions)
+    ]
+    return fed, clock, regions, engines
+
+
+def _drain(clock):
+    guard = 0
+    while clock.pending:
+        clock.step()
+        guard += 1
+        assert guard < 10_000
+
+
+def _seed_peer(region, q, *, now=0.0, ttl=1000.0, staticity=7):
+    return region.cache.insert(
+        q, WORLD.embed(q), WORLD.fetch(q), now=now, cost=0.005,
+        latency=0.4, size=WORLD.value_size(q), staticity=staticity, ttl=ttl,
+    )
+
+
+# ---------------------------------------------------------- decision tree
+
+
+def test_peer_hit_transfers_value_with_provenance_and_ttl():
+    fed, clock, regions, engines = _mk_federation(rtt=0.08)
+    q = WORLD.query(5, 0)
+    src = _seed_peer(regions[1], q, ttl=500.0)
+    fed.route(engines[0], st=None, q=q, t0=0.0)
+    _drain(clock)
+
+    assert fed.stats.peeks == 1
+    assert fed.stats.peer_hits == 1
+    assert fed.stats.transfers == 1
+    assert fed.stats.origin_fetches == 0
+    [res] = engines[0].results
+    assert res["value"] == WORLD.fetch(q)
+    assert res["origin"] == 1                      # provenance
+    assert res["staticity"] == 7                   # carried on the lease
+    assert res["size"] == src.size                 # bytes actually moved
+    assert res["cost"] == pytest.approx(fed.transfer_cost)
+    # response at rtt, data lands one half-RTT + serialization later
+    t_arrive = 0.08 + 0.04 + WORLD.value_size(q) / fed.bandwidth
+    assert res["now"] == pytest.approx(t_arrive)
+    # adjusted TTL: the copy must expire exactly when the source does
+    assert res["ttl"] == pytest.approx(float(src.expires_at) - t_arrive)
+    assert res["ttl"] < 500.0
+
+
+def test_all_peers_nak_falls_back_to_origin():
+    fed, clock, regions, engines = _mk_federation(rtt=0.08)
+    q = WORLD.query(5, 0)
+    fed.route(engines[0], st=None, q=q, t0=0.0)
+    _drain(clock)
+
+    assert fed.stats.peer_misses == 1
+    assert fed.stats.origin_fetches == 1
+    assert fed.stats.transfers == 0
+    [res] = engines[0].results
+    assert res["value"] is None                   # engine fetches world
+    assert res["cost"] > fed.transfer_cost        # origin call price
+    # origin fetch starts only after the last NAK (one full RTT)
+    assert res["now"] >= 0.08 + regions[0].remote.lat_lo
+
+
+def test_lease_expiring_in_flight_is_a_miss():
+    fed, clock, regions, engines = _mk_federation(rtt=0.08)
+    q = WORLD.query(5, 0)
+    # live at the probe instant (rtt/2 = 0.04) but dead before the data
+    # could arrive (rtt * 1.5 = 0.12)
+    _seed_peer(regions[1], q, ttl=0.10)
+    fed.route(engines[0], st=None, q=q, t0=0.0)
+    _drain(clock)
+
+    assert fed.stats.expired_leases == 1
+    assert fed.stats.transfers == 0
+    assert fed.stats.origin_fetches == 1
+
+
+def test_nearest_holder_wins():
+    fed, clock, regions, engines = _mk_federation(
+        n_regions=3,
+        rtt=np.array([[0.0, 0.2, 0.05],
+                      [0.2, 0.0, 0.22],
+                      [0.05, 0.22, 0.0]]),
+    )
+    q = WORLD.query(5, 0)
+    _seed_peer(regions[1], q)
+    _seed_peer(regions[2], q)
+    fed.route(engines[0], st=None, q=q, t0=0.0)
+    _drain(clock)
+
+    assert fed.stats.transfers == 1              # only one transfer
+    [res] = engines[0].results
+    assert res["origin"] == 2                    # the 0.05s peer, not 0.2s
+
+
+def test_peering_disabled_goes_straight_to_origin():
+    fed, clock, regions, engines = _mk_federation(peering=False)
+    _seed_peer(regions[1], WORLD.query(5, 0))
+    fed.route(engines[0], st=None, q=WORLD.query(5, 0), t0=0.0)
+    _drain(clock)
+    assert fed.stats.peeks == 0
+    assert fed.stats.origin_fetches == 1
+
+
+# ------------------------------------------------------- runner / engine
+
+
+def _tiny_runner(topology, *, overlap=0.8, seed=0, n_per_region=40):
+    world = SemanticWorld(n_intents=80, dim=32, seed=9)
+    streams = region_workloads(world, n_per_region, 2, overlap=overlap,
+                               seed=10)
+    return FederationRunner(
+        world=world, region_requests=streams, topology=topology,
+        engine_cfg=EngineConfig(prefetch=False), seed=seed,
+    )
+
+
+def test_local_hit_never_consults_the_router():
+    """A request whose intent is already cached locally must resolve
+    without a peek broadcast: peeks count only actual local misses."""
+    runner = _tiny_runner("peered")
+    s = runner.run()
+    fed = runner.federation.stats
+    hits = s["aggregate"]["cache_hits"]
+    assert hits > 0
+    # every peek corresponds to one routed miss; hits bypass the router
+    total_rounds = sum(rec.rounds for e in runner.engines
+                      for rec in e.records)
+    assert fed.peeks == total_rounds - hits
+    assert fed.peer_hits + fed.peer_misses == fed.peeks
+
+
+def test_transferred_entries_carry_provenance_in_cache():
+    runner = _tiny_runner("peered")
+    runner.run()
+    origins = [
+        se.origin
+        for r in runner.regions
+        for se in (r.cache.store[i] for i in r.cache.store)
+    ]
+    transferred = [o for o in origins if o is not None]
+    assert transferred, "peered run should admit at least one transfer"
+    assert all(o in (0, 1) for o in transferred)
+
+
+def test_peered_beats_local_on_overlapping_workload():
+    local = _tiny_runner("local").run()["aggregate"]
+    peered = _tiny_runner("peered").run()["aggregate"]
+    assert peered["remote_time_mean"] < local["remote_time_mean"]
+    assert peered["api_calls"] < local["api_calls"]
+
+
+def test_shared_clock_determinism():
+    """Same seeds -> bit-identical aggregate and per-region summaries,
+    regardless of how region events interleave on the shared clock."""
+    a = _tiny_runner("peered", seed=4).run()
+    b = _tiny_runner("peered", seed=4).run()
+    assert a == b
+    c = _tiny_runner("global", seed=4).run()
+    d = _tiny_runner("global", seed=4).run()
+    assert c == d
+
+
+def test_global_topology_shares_one_cache_and_pays_rtt():
+    runner = _tiny_runner("global")
+    assert runner.regions[0].cache is runner.regions[1].cache
+    assert runner.engines[0].cfg.cache_access_latency == 0.0
+    assert runner.engines[1].cfg.cache_access_latency == pytest.approx(0.08)
+    s = runner.run()
+    assert s["aggregate"]["peer_transfers"] == 0
+    assert runner.federation.stats.peeks == 0
+
+
+# ------------------------------------------------------- region workloads
+
+
+def test_region_workloads_structure():
+    world = SemanticWorld(n_intents=200, dim=32, seed=1)
+    streams = region_workloads(world, 100, 3, overlap=0.5, seed=2)
+    assert len(streams) == 3
+    rids = [r.rid for s in streams for r in s]
+    assert len(set(rids)) == len(rids)           # globally unique
+    for s in streams:
+        assert all(
+            a.arrival <= b.arrival for a, b in zip(s, s[1:])
+        )
+
+
+def test_region_workload_overlap_controls_sharing():
+    world = SemanticWorld(n_intents=200, dim=32, seed=1)
+
+    def intent_sets(overlap):
+        streams = region_workloads(world, 200, 2, overlap=overlap, seed=3)
+        return [
+            {world.intent_of(r.query) for r in s} for s in streams
+        ]
+
+    a0, a1 = intent_sets(0.0)
+    assert not a0 & a1                           # disjoint private pools
+    b0, b1 = intent_sets(0.9)
+    inter = len(b0 & b1) / min(len(b0), len(b1))
+    assert inter > 0.5                           # heavy sharing at 0.9

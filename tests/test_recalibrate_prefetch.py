@@ -67,6 +67,39 @@ def test_markov_prefetcher_learns_transitions():
     assert pred is None
 
 
+def test_markov_interleaved_sessions_match_sequential():
+    """Regression: a single global predecessor chain cross-contaminated
+    transitions when concurrent request streams interleaved. Keyed by
+    session id, any interleaving must learn the same table."""
+    streams = {
+        "s1": ["a", "b", "c", "a", "b"],
+        "s2": ["x", "y", "x", "y", "x"],
+        "s3": ["b", "a", "b", "a", "b"],
+    }
+
+    def learn(order):
+        pf = MarkovPrefetcher(confidence=0.0, min_support=1)
+        for key, state in order:
+            pf.observe(state, key=key)
+        return dict(pf.trans), dict(pf.totals)
+
+    sequential = [
+        (k, s) for k in sorted(streams) for s in streams[k]
+    ]
+    # round-robin interleaving of the three sessions
+    interleaved = [
+        (k, streams[k][i])
+        for i in range(5) for k in sorted(streams)
+    ]
+    assert learn(sequential) == learn(interleaved)
+    # and the contaminated global-chain result differs (the old bug):
+    pf_global = MarkovPrefetcher(confidence=0.0, min_support=1)
+    for _, s in interleaved:
+        pf_global.observe(s)  # no key -> one shared chain
+    assert (dict(pf_global.trans), dict(pf_global.totals)) \
+        != learn(sequential)
+
+
 @given(st.lists(st.integers(0, 4), min_size=2, max_size=200))
 @settings(max_examples=30, deadline=None)
 def test_markov_probabilities_valid(seq):

@@ -59,6 +59,58 @@ def test_token_bucket_rate():
     assert tb.try_acquire(1.05)
 
 
+def test_token_bucket_out_of_order_acquires_monotonic():
+    """Regression: interleaved fetches resolve future retry instants, so a
+    later-issued acquire can arrive with an EARLIER timestamp. The refill
+    must clamp to monotonic time — a negative dt used to subtract tokens
+    and drag t_last backwards."""
+    tb = TokenBucket(qpm=600.0, burst=10.0)  # 10/s
+    times = [5.0, 2.0, 8.0, 1.0, 0.5, 8.0, 3.0, 20.0, 4.0]
+    prev = tb.tokens
+    for t in times:
+        ok = tb.try_acquire(t)
+        # time alone never decreases the count; only a granted token does
+        assert tb.tokens >= prev - (1.0 if ok else 0.0) - 1e-12
+        assert tb.tokens >= 0.0
+        prev = tb.tokens
+    # t_last never moved backwards
+    assert tb.t_last == 20.0
+
+
+def test_token_bucket_backdated_refill_no_double_credit():
+    tb = TokenBucket(qpm=60.0, burst=2.0)  # 1/s
+    assert tb.try_acquire(0.0)
+    assert tb.try_acquire(0.0)
+    assert not tb.try_acquire(0.0)          # drained
+    assert tb.try_acquire(1.5)              # 1.5 tokens refilled, take 1
+    # a stale-timestamped acquire must not mint extra tokens (t_last is
+    # already 1.5; refilling "from 0.2" again would double-credit)
+    assert not tb.try_acquire(0.2)
+    assert tb.tokens == pytest.approx(0.5)
+
+
+def test_exact_cache_expired_lookup_reclaims_usage():
+    """Regression: expired entries stayed resident, so their bytes were
+    counted in `usage` forever and silently shrank effective capacity."""
+    from repro.serving.engine import ExactCache
+
+    c = ExactCache(capacity_bytes=1000, max_ttl=10.0)
+    c.insert("a", "va", 300, now=0.0)
+    c.insert("b", "vb", 400, now=0.0)
+    assert c.usage == 700
+    assert c.lookup("a", now=5.0) == "va"   # still live
+    # TTL passes: the miss must delete the entries and reclaim bytes
+    assert c.lookup("a", now=15.0) is None
+    assert c.usage == 400
+    assert "a" not in c.d and "a" not in c.order
+    assert c.lookup("b", now=15.0) is None
+    assert c.usage == 0
+    assert c.order == []
+    # reclaimed capacity is usable again without evicting anything
+    c.insert("c", "vc", 900, now=16.0)
+    assert c.usage == 900
+
+
 def test_remote_retry_counts():
     svc = RemoteDataService(qpm=60.0, seed=0)
     t = 0.0

@@ -75,11 +75,17 @@ def test_rate_limit_ablation():
 
 def test_colocation_near_parity():
     """Table 7: co-located retains most of dedicated-2-chip throughput at
-    half the hardware."""
+    half the hardware. Prefetch is off so the co/ded comparison isolates
+    the serving architecture: speculative fetches fire at slightly
+    different virtual times in the two configurations, and that api-cost
+    jitter (a few calls) is larger than the GPU-cost saving the
+    assertion measures."""
     co = run_once(workload="zipf", mode="cortex", n_requests=400,
-                  cache_ratio=0.6, concurrency=12, colocated=True, seed=2)
+                  cache_ratio=0.6, concurrency=12, colocated=True,
+                  prefetch=False, seed=2)
     ded = run_once(workload="zipf", mode="cortex", n_requests=400,
-                   cache_ratio=0.6, concurrency=12, colocated=False, seed=2)
+                   cache_ratio=0.6, concurrency=12, colocated=False,
+                   prefetch=False, seed=2)
     assert co["throughput_rps"] > 0.8 * ded["throughput_rps"]
     assert co["thpt_per_dollar"] > ded["thpt_per_dollar"]
 
