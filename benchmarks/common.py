@@ -15,9 +15,17 @@ DATASETS = {
 }
 
 
+# rows emitted by the current benchmark, captured for --json output
+# (benchmarks/run.py clears this before each benchmark and snapshots it
+# after, so regression gates that SystemExit still leave their rows)
+ROWS: list[dict] = []
+
+
 def emit(name: str, us_per_call: float, **derived):
     kv = " ".join(f"{k}={v}" for k, v in derived.items())
     print(f"{name},{us_per_call:.1f},{kv}")
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                 "derived": derived})
 
 
 def run_ds(dataset: str, mode: str, **kw):

@@ -226,6 +226,96 @@ def federation_sweep(smoke: bool = False):
     return results
 
 
+def tiered_sweep(smoke: bool = False):
+    """Tiered-storage sweep (DESIGN.md §10): hot-only vs hot+warm at
+    EQUAL total cache bytes on the long-tail capacity-pressure workload,
+    sweeping the tail length (= reuse distance). The warm tier must win
+    on hit rate AND API spend, the int8 coarse index must keep
+    recall@k ≥ 0.95 vs fp32, and two same-seed tiered runs must produce
+    bit-identical summaries — any violation exits nonzero (CI gate).
+    """
+    import json as _json
+
+    from repro.core.seri import VectorIndex
+    from repro.core.tiers import QuantIndex
+    from repro.data.world import SemanticWorld
+
+    # --- int8 stage-1 recall@k vs the fp32 index, across seeds
+    recalls = []
+    for seed in (0, 1, 2):
+        world = SemanticWorld(n_intents=200, dim=64, seed=seed)
+        embs = np.stack([
+            world.embed(world.query(i, 0)) for i in range(200)
+        ])
+        vi = VectorIndex(256, 64)
+        qi = QuantIndex(256, 64)
+        for i in range(200):
+            vi.add(i, embs[i])
+            qi.add(i, embs[i])
+        qs = np.stack([
+            world.embed(world.query(i, 1)) for i in range(0, 200, 4)
+        ])
+        for i in range(qs.shape[0]):
+            ids_f, _ = vi.search(qs[i], 4, tau_sim=0.0)
+            ids_q, _ = qi.search(qs[i], 4, tau_sim=0.0)
+            if ids_f:
+                recalls.append(
+                    len(set(ids_f) & set(ids_q)) / len(ids_f)
+                )
+    recall = float(np.mean(recalls))
+    emit("tiered/int8_recall", 0.0, recall_at_4=round(recall, 4),
+         n_queries=len(recalls))
+    if recall < 0.95:
+        raise SystemExit(
+            f"tiered regression: int8 stage-1 recall@4 ({recall:.3f}) "
+            "below the 0.95 floor"
+        )
+
+    # --- hot-only vs hot+warm at equal total bytes, sweeping tail length
+    tails = (160,) if smoke else (160, 320, 640)
+    n_req = 160 if smoke else 700
+    results = {}
+    for tail in tails:
+        common_kw = dict(
+            workload="longtail", n_requests=n_req,
+            n_intents=48 + max(tails), dim=64, tail_len=tail,
+            cache_ratio=0.18, concurrency=8, max_ttl=1800.0, seed=31,
+        )
+        hot = run_once(mode="cortex", **common_kw)
+        warm = run_once(mode="cortex", warm_frac=0.5, **common_kw)
+        warm2 = run_once(mode="cortex", warm_frac=0.5, **common_kw)
+        if _json.dumps(warm, sort_keys=True, default=float) != \
+                _json.dumps(warm2, sort_keys=True, default=float):
+            raise SystemExit(
+                "tiered regression: two same-seed hot+warm runs diverged "
+                f"(tail={tail}) — summaries must be bit-identical"
+            )
+        results[tail] = (hot, warm)
+        emit(f"tiered/hot_only@t{tail}", hot["latency_mean"] * 1e6,
+             hit=round(hot["hit_rate"], 3),
+             api=hot["api_calls"],
+             api_cost=round(hot["api_cost"], 3),
+             evictions=hot["evictions"])
+        emit(f"tiered/hot_warm@t{tail}", warm["latency_mean"] * 1e6,
+             hit=round(warm["hit_rate"], 3),
+             api=warm["api_calls"],
+             api_cost=round(warm["api_cost"], 3),
+             demotions=warm["demotions"],
+             promotions=warm["promotions"],
+             warm_hits=warm["warm_hits"],
+             warm_items=warm["warm_items"])
+    for tail, (hot, warm) in results.items():
+        if warm["hit_rate"] <= hot["hit_rate"] or \
+                warm["api_cost"] >= hot["api_cost"]:
+            raise SystemExit(
+                "tiered regression: hot+warm must beat hot-only on hit "
+                f"rate AND api cost at equal bytes (tail={tail}: "
+                f"hit {warm['hit_rate']:.3f} vs {hot['hit_rate']:.3f}, "
+                f"cost {warm['api_cost']:.3f} vs {hot['api_cost']:.3f})"
+            )
+    return results
+
+
 def recalibration_overhead():
     """§6.6: periodic threshold recalibration cost + drift adaptation."""
     base = run_ds("hotpotqa", "cortex", cache_ratio=0.5, concurrency=8)

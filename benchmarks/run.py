@@ -2,16 +2,22 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig7,table5] [--smoke]
+      [--json]
 
-``--smoke`` shrinks benchmarks that support it (currently the federation
-sweep) to CI-sized problems; regressions still fail the run.
+``--smoke`` shrinks benchmarks that support it (the federation and tiered
+sweeps) to CI-sized problems; regressions still fail the run. ``--json``
+additionally writes one machine-readable ``BENCH_<name>.json`` per
+benchmark (rows of name/us_per_call/derived), so the perf trajectory is
+tracked across PRs — the file is written even when a regression gate
+fails the run.
 """
 import argparse
 import inspect
+import json
 import sys
 import time
 
-from benchmarks import figures, kernels_bench
+from benchmarks import common, figures, kernels_bench
 
 ALL = {
     "fig7": figures.fig7_skewed,
@@ -27,6 +33,7 @@ ALL = {
     "table7": figures.table7_colocation,
     "recal": figures.recalibration_overhead,
     "federation": figures.federation_sweep,
+    "tiered": figures.tiered_sweep,
     "kernel_ann": kernels_bench.kernel_ann,
     "kernel_flash": kernels_bench.kernel_flash,
     "cache_path": kernels_bench.cache_path_calibration,
@@ -40,6 +47,8 @@ def main() -> None:
                     help="comma-separated subset of: " + ",".join(ALL))
     ap.add_argument("--smoke", action="store_true",
                     help="tiny problem sizes (CI regression gate)")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<name>.json per benchmark")
     args = ap.parse_args()
     names = list(ALL) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
@@ -50,10 +59,19 @@ def main() -> None:
             sys.exit(2)
         t = time.time()
         fn = ALL[n]
-        if args.smoke and "smoke" in inspect.signature(fn).parameters:
-            fn(smoke=True)
-        else:
-            fn()
+        common.ROWS.clear()
+        try:
+            if args.smoke and "smoke" in inspect.signature(fn).parameters:
+                fn(smoke=True)
+            else:
+                fn()
+        finally:
+            # write rows even when a regression gate SystemExits, so a
+            # failing CI run still leaves the measurements behind
+            if args.json:
+                with open(f"BENCH_{n}.json", "w") as f:
+                    json.dump({"name": n, "rows": list(common.ROWS)}, f,
+                              indent=1, default=str)
         print(f"# {n} done in {time.time()-t:.1f}s", file=sys.stderr)
     print(f"# all benchmarks done in {time.time()-t0:.1f}s", file=sys.stderr)
 

@@ -87,14 +87,59 @@ class CortexCache:
         if se.prefetched and se.freq == 1:
             self.stats.prefetch_hits += 1
 
-    def _account_hit(self, res: SeriResult, now: float) -> None:
-        if res.hit:
-            self.account_hit(res.se, now)
-        else:
-            self.stats.misses += 1
-
     def lookup(self, query: str, q_emb: np.ndarray, now: float) -> SeriResult:
         return self.lookup_batch([query], q_emb[None], now)[0]
+
+    def _stage1_blocks(self, q_embs: np.ndarray, now: float):
+        """Stage 1 for a query block. Returns ``(blocks, flags)``:
+        per-query ``(cands, sims)`` with sims ALIGNED to the surviving
+        (unexpired) candidates, plus a per-query slow-tier-consult flag
+        (always False here). The single stage-1 seam — the tiered cache
+        overrides this to consult its warm tier, and every lookup flavor
+        below goes through it."""
+        found = self.seri.index.search_batch(
+            np.asarray(q_embs), self.seri.top_k, self.seri.tau_sim
+        )
+        out = []
+        for se_ids, sims in found:
+            keep = [
+                j for j, i in enumerate(se_ids)
+                if i in self.store and not self.store[i].expired(now)
+            ]
+            out.append(([self.store[se_ids[j]] for j in keep],
+                        np.asarray(sims[keep], np.float32)))
+        return out, [False] * len(out)
+
+    def _judge_blocks(self, queries: Sequence[str], blocks,
+                      now: float) -> list[SeriResult]:
+        """Stage 2 over pre-fetched stage-1 blocks: candidates of every
+        query validated in ONE ``score_pairs`` call (pair order = query
+        order, candidate order — exactly the order sequential scalar
+        calls would use, so per-pair-seeded judges draw identical
+        scores), then per-query ``finalize`` applies hit bookkeeping in
+        query order."""
+        flat_q: list[str] = []
+        flat_key: list[str] = []
+        for query, (cands, _) in zip(queries, blocks):
+            flat_q.extend([query] * len(cands))
+            flat_key.extend(c.key for c in cands)
+        flat_scores = (
+            self.seri.judge.score_pairs(flat_q, flat_key) if flat_q
+            else np.zeros(0, np.float32)
+        )
+        results = []
+        off = 0
+        for query, (cands, sims) in zip(queries, blocks):
+            m = len(cands)
+            scores = flat_scores[off:off + m]
+            off += m
+            if not m:
+                self.stats.misses += 1
+                results.append(SeriResult(False, None, 0, 0, 0.0, sims))
+                continue
+            results.append(self.finalize(query, cands, scores, now,
+                                         sims=sims))
+        return results
 
     def lookup_batch(self, queries: Sequence[str], q_embs: np.ndarray,
                      now: float) -> list[SeriResult]:
@@ -103,11 +148,8 @@ class CortexCache:
         bookkeeping is applied in query order, so the hit/miss sequence is
         identical to sequential scalar lookups from the same state."""
         self.stats.lookups += len(queries)
-        results = self.seri.retrieve_batch(queries, q_embs, self.store, now)
-        for res in results:
-            self.stats.judge_calls += res.judge_calls
-            self._account_hit(res, now)
-        return results
+        blocks, _ = self._stage1_blocks(q_embs, now)
+        return self._judge_blocks(queries, blocks, now)
 
     # ---------------------------------------------------- staged lookup
     # The serving engine needs the two Seri stages split so the judge can
@@ -120,33 +162,41 @@ class CortexCache:
     def stage1_batch(self, queries: Sequence[str], q_embs: np.ndarray,
                      now: float) -> list[list[SemanticElement]]:
         """ANN candidates for a query block (engine micro-batching)."""
-        self.stats.lookups += len(queries)
-        found = self.seri.index.search_batch(
-            np.asarray(q_embs), self.seri.top_k, self.seri.tau_sim
-        )
-        out = []
-        for se_ids, _sims in found:
-            out.append([
-                self.store[i] for i in se_ids
-                if i in self.store and not self.store[i].expired(now)
-            ])
-        return out
+        return self.stage1_batch_flagged(queries, q_embs, now)[0]
 
-    def finalize(self, query: str, cands, scores, now: float) -> SeriResult:
+    def stage1_batch_flagged(self, queries: Sequence[str],
+                             q_embs: np.ndarray, now: float):
+        """``stage1_batch`` plus per-query slow-tier-consult flags (all
+        False for the single-tier cache). The engine reads the flags for
+        per-tier latency accounting — the consult policy is the cache's,
+        and the engine must never re-derive it."""
+        self.stats.lookups += len(queries)
+        blocks, flags = self._stage1_blocks(q_embs, now)
+        return [cands for cands, _ in blocks], flags
+
+    def _rebind(self, se, now: float):
+        """Return the live HOT-tier view for a judge-validated winner, or
+        None if it vanished between stage 1 and judge completion. The
+        tiered subclass overrides this to promote warm-tier winners."""
+        return se if se.se_id in self.store else None
+
+    def finalize(self, query: str, cands, scores, now: float,
+                 sims: Optional[np.ndarray] = None) -> SeriResult:
         self.stats.judge_calls += len(cands)
+        if sims is None:
+            sims = np.zeros(0, np.float32)
         order = np.argsort(-np.asarray(scores))
         best = float(scores[order[0]]) if len(cands) else 0.0
         for j in order:
             if scores[j] >= self.seri.tau_lsm:
-                se = cands[j]
-                if se.se_id not in self.store:  # evicted meanwhile
+                se = self._rebind(cands[j], now)
+                if se is None:  # evicted meanwhile
                     continue
                 self.account_hit(se, now)
                 return SeriResult(True, se, len(cands), len(cands), best,
-                                  np.zeros(0, np.float32))
+                                  sims)
         self.stats.misses += 1
-        return SeriResult(False, None, len(cands), len(cands), best,
-                          np.zeros(0, np.float32))
+        return SeriResult(False, None, len(cands), len(cands), best, sims)
 
     def miss_no_candidates(self) -> None:
         self.stats.misses += 1
@@ -260,27 +310,37 @@ class CortexCache:
         row = self.soa.id2row[se_id]
         self._remove_rows(np.asarray([row]), ttl=ttl)
 
-    def _remove_rows(self, rows: np.ndarray, *, ttl: bool) -> None:
-        """Batched removal: index rows + SoA fields in one pass."""
-        n = len(rows)
-        if not n:
-            return
+    def _drop_rows(self, rows: np.ndarray) -> None:
+        """Free hot rows (index + SoA + usage) WITHOUT eviction stats —
+        the shared tail of eviction, TTL purge, and tier demotion."""
         freed = int(self.soa.size[rows].sum())
         self.seri.index.remove_rows(rows)
         for r in rows:
             self.soa.remove_row(int(r))
         self.usage -= freed
+        self.stats.bytes_stored = self.usage
+
+    def _remove_rows(self, rows: np.ndarray, *, ttl: bool) -> None:
+        """Batched removal: index rows + SoA fields in one pass."""
+        n = len(rows)
+        if not n:
+            return
+        self._drop_rows(rows)
         if ttl:
             self.stats.ttl_evictions += n
         else:
             self.stats.evictions += n
-        self.stats.bytes_stored = self.usage
 
     def purge_expired(self, now: float) -> int:
         """TTL purge as one boolean mask over the SoA arrays."""
         dead = self.soa.expired_rows(now)
         self._remove_rows(dead, ttl=True)
         return len(dead)
+
+    def _retire_victims(self, victims: np.ndarray, now: float) -> None:
+        """Victim sink: base cache evicts outright; the tiered cache
+        overrides this to demote into its warm tier instead."""
+        self._remove_rows(victims, ttl=False)
 
     def _make_room(self, incoming: int, now: float) -> None:
         if self.usage + incoming <= self.capacity_bytes:
@@ -290,11 +350,11 @@ class CortexCache:
         if need <= 0:
             return
         victims = self.soa.victim_rows(now, self.eviction, need_bytes=need)
-        self._remove_rows(victims, ttl=False)
+        self._retire_victims(victims, now)
 
     def _evict_n(self, n: int, now: float) -> None:
         victims = self.soa.victim_rows(now, self.eviction, n=n)
-        self._remove_rows(victims, ttl=False)
+        self._retire_victims(victims, now)
 
     # ------------------------------------------------------------ misc
 

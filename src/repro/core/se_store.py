@@ -26,10 +26,6 @@ import numpy as np
 
 from repro.core.semantic_element import SemanticElement
 
-# numeric metadata fields, one parallel array each
-_F64 = ("last_access", "created_at", "expires_at", "cost", "latency")
-_I64 = ("freq", "size")
-
 
 class SEStore:
     """Per-field parallel arrays for up to ``capacity`` SEs.
@@ -64,6 +60,12 @@ class SEStore:
     def add(self, row: int, se_id: int, *, key, value, staticity, cost,
             latency, size, created_at, expires_at, freq, last_access,
             prefetched, intent, origin=None) -> SemanticElement:
+        if self.active[row]:
+            # a silent clobber would leave the displaced SE's id2row entry
+            # pointing at a row that now describes a different element
+            raise ValueError(
+                f"row {row} already holds live SE {int(self.se_id[row])}"
+            )
         self.se_id[row] = se_id
         self.freq[row] = freq
         self.size[row] = size
@@ -81,6 +83,28 @@ class SEStore:
         self.origin[row] = origin
         self.id2row[se_id] = row
         return SemanticElement(self, row)
+
+    def snapshot_row(self, row: int) -> dict:
+        """Full metadata copy of one live row as python scalars, keyed by
+        the ``add`` kwarg names plus ``se_id`` — the tier-lifecycle
+        handoff (core/tiers.py). Paired with ``add_meta`` so a
+        demote/promote round trip copies every field by construction."""
+        s = self
+        return dict(
+            se_id=int(s.se_id[row]), key=s.key[row], value=s.value[row],
+            staticity=int(s.staticity[row]), cost=float(s.cost[row]),
+            latency=float(s.latency[row]), size=int(s.size[row]),
+            created_at=float(s.created_at[row]),
+            expires_at=float(s.expires_at[row]),
+            freq=int(s.freq[row]), last_access=float(s.last_access[row]),
+            prefetched=bool(s.prefetched[row]), intent=s.intent[row],
+            origin=s.origin[row],
+        )
+
+    def add_meta(self, row: int, meta: dict) -> SemanticElement:
+        """Re-home a ``snapshot_row`` dict at ``row``."""
+        m = dict(meta)
+        return self.add(row, m.pop("se_id"), **m)
 
     def remove_row(self, row: int) -> int:
         """Deactivate one row; returns the freed byte count."""

@@ -37,6 +37,11 @@ def _field(name, cast):
 class SemanticElement:
     __slots__ = ("_store", "_row", "se_id")
 
+    # storage tier this view lives in; the warm tier's view class
+    # (core/tiers.py::WarmElement) reports "warm" so retrieval/hit paths
+    # can route promotions without isinstance checks across modules
+    tier = "hot"
+
     def __init__(self, store, row: int):
         self._store = store
         self._row = int(row)

@@ -11,38 +11,35 @@ semantic-aware cache hit.
 
 Both stages are batched (DESIGN.md §8): ``search_batch`` pushes a whole
 (B, D) query block through one masked matmul (or one ``ann_topk`` launch,
-which always had the B dimension), and ``retrieve_batch`` scores the
-candidates of *all* queries in a single ``judge.score_pairs`` call. The
-scalar entry points are one-query wrappers over the batched path, so
-scalar and batched execution are the same code and produce identical
-results.
+which always had the B dimension), and ``CortexCache._judge_blocks``
+scores the candidates of *all* queries in a single ``judge.score_pairs``
+call. The scalar entry points are one-query wrappers over the batched
+path, so scalar and batched execution are the same code and produce
+identical results.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 import numpy as np
 
 from repro.core.semantic_element import SemanticElement
 
 
-class VectorIndex:
-    """Fixed-capacity embedding store with free-list row management."""
+class RowIndex:
+    """Fixed-capacity free-list row allocator — the management half
+    shared by the fp32 hot index below and the int8 warm index
+    (``core/tiers.py::QuantIndex``): active mask, row→se_id mapping, row
+    alloc/free. Subclasses own the storage arrays and zero them in
+    ``_clear_rows``, so the two tiers' row lifecycles cannot drift."""
 
-    def __init__(self, capacity: int, dim: int, backend: str = "numpy"):
+    def __init__(self, capacity: int, dim: int):
         self.capacity = capacity
         self.dim = dim
-        self.backend = backend
-        self.emb = np.zeros((capacity, dim), np.float32)
         self.active = np.zeros(capacity, bool)
         self.row_se: list[Optional[int]] = [None] * capacity
         self._free = list(range(capacity - 1, -1, -1))
-        self._kernel_fn = None
-        if backend == "kernel":
-            from repro.kernels.ops import ann_topk_jit
-
-            self._kernel_fn = ann_topk_jit
 
     def __len__(self) -> int:
         return int(self.active.sum())
@@ -51,22 +48,16 @@ class VectorIndex:
     def full(self) -> bool:
         return not self._free
 
-    def add(self, se_id: int, embedding: np.ndarray) -> int:
+    def _alloc(self, se_id: int) -> int:
         if not self._free:
             raise RuntimeError("index full — evict first")
         row = self._free.pop()
-        self.emb[row] = embedding
         self.active[row] = True
         self.row_se[row] = se_id
         return row
 
-    def remove(self, row: int) -> None:
-        if not self.active[row]:
-            return
-        self.active[row] = False
-        self.row_se[row] = None
-        self.emb[row] = 0.0
-        self._free.append(row)
+    def _clear_rows(self, ra: np.ndarray) -> None:
+        raise NotImplementedError
 
     def remove_rows(self, rows) -> None:
         """Batched removal: one fancy-indexed store per field."""
@@ -75,10 +66,48 @@ class VectorIndex:
             return
         ra = np.asarray(rows)
         self.active[ra] = False
-        self.emb[ra] = 0.0
+        self._clear_rows(ra)
         for r in rows:
             self.row_se[r] = None
             self._free.append(r)
+
+
+def topk_desc(s: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-row top-k, similarity-descending, over a (B, N) score matrix
+    (mutates ``s``): negate in place, ``argpartition``, stable argsort —
+    the one selection idiom both the fp32 and int8 (core/tiers.py)
+    indexes use, so their tie-break semantics cannot drift. Returns
+    (rows (B, k), vals (B, k))."""
+    np.negative(s, out=s)                             # sort ascending
+    k_eff = min(k, s.shape[1])
+    part = np.argpartition(s, k_eff - 1, axis=1)[:, :k_eff]
+    psc = np.take_along_axis(s, part, axis=1)
+    order = np.argsort(psc, axis=1, kind="stable")
+    rows = np.take_along_axis(part, order, axis=1)
+    vals = -np.take_along_axis(psc, order, axis=1)
+    return rows, vals
+
+
+class VectorIndex(RowIndex):
+    """Fixed-capacity embedding store with free-list row management."""
+
+    def __init__(self, capacity: int, dim: int, backend: str = "numpy"):
+        super().__init__(capacity, dim)
+        self.backend = backend
+        self.emb = np.zeros((capacity, dim), np.float32)
+        self._kernel_fn = None
+        if backend == "kernel":
+            from repro.kernels.ops import ann_topk_jit
+
+            self._kernel_fn = ann_topk_jit
+
+    def add(self, se_id: int, embedding: np.ndarray) -> int:
+        row = self._alloc(se_id)
+        self.emb[row] = embedding
+        return row
+
+    def _clear_rows(self, ra: np.ndarray) -> None:
+        self.emb[ra] = 0.0
 
     # ----------------------------------------------------------- search
 
@@ -107,14 +136,8 @@ class VectorIndex:
             # (B, N) row-major so the per-query partition/sort below runs
             # over contiguous lanes (axis=0 on (N, B) is strided and ~3×
             # slower at large N·B)
-            neg = np.where(self.active[None, :], q @ self.emb.T, -1.0)
-            np.negative(neg, out=neg)                     # sort ascending
-            k_eff = min(k, neg.shape[1])
-            part = np.argpartition(neg, k_eff - 1, axis=1)[:, :k_eff]
-            psc = np.take_along_axis(neg, part, axis=1)
-            order = np.argsort(psc, axis=1, kind="stable")
-            rows = np.take_along_axis(part, order, axis=1)     # (B, k)
-            sims = -np.take_along_axis(psc, order, axis=1)
+            s = np.where(self.active[None, :], q @ self.emb.T, -1.0)
+            rows, sims = topk_desc(s, k)                       # (B, k)
         out = []
         for i in range(b):
             keep = sims[i] >= tau_sim
@@ -131,11 +154,21 @@ class SeriResult:
     n_candidates: int
     judge_calls: int
     best_score: float
+    # stage-1 similarities ALIGNED with the surviving candidate list:
+    # sims[j] is the cosine of the j-th candidate the judge scored
+    # (expired stage-1 matches are dropped from both)
     sims: np.ndarray
 
 
 class Seri:
-    """Two-stage retrieval over a SE store."""
+    """Two-stage retrieval configuration over a SE store.
+
+    Holds the stage-1 index, the judge, and the thresholds. The
+    retrieval pipeline itself lives in ``CortexCache._stage1_blocks`` /
+    ``_judge_blocks`` (one implementation for the scalar, batched, and
+    engine-staged paths — and the seam the tiered cache overrides);
+    keeping a second copy here is how sims/candidate misalignment bugs
+    happen twice."""
 
     def __init__(self, index: VectorIndex, judge, *, tau_sim: float = 0.9,
                  tau_lsm: float = 0.9, top_k: int = 4):
@@ -144,55 +177,3 @@ class Seri:
         self.tau_sim = tau_sim
         self.tau_lsm = tau_lsm
         self.top_k = top_k
-
-    def retrieve(self, query: str, q_emb: np.ndarray, store,
-                 now: float) -> SeriResult:
-        return self.retrieve_batch([query], q_emb[None], store, now)[0]
-
-    def retrieve_batch(self, queries: Sequence[str], q_embs: np.ndarray,
-                       store, now: float) -> list[SeriResult]:
-        """Full two-stage retrieval for a query block.
-
-        Candidates of every query are validated in ONE ``score_pairs``
-        call (the judge-prefill amortization the engine's micro-batching
-        exploits, paper §4.4). Pair order is (query order, candidate
-        order), i.e. exactly the order sequential scalar calls would use —
-        judges that consume rng state per pair draw identical scores.
-        """
-        found = self.index.search_batch(
-            np.asarray(q_embs), self.top_k, self.tau_sim
-        )
-        per_q = []
-        flat_q: list[str] = []
-        flat_key: list[str] = []
-        for query, (se_ids, sims) in zip(queries, found):
-            # drop expired candidates (freshness is part of validity, §4.1)
-            cands = [
-                store[i] for i in se_ids
-                if i in store and not store[i].expired(now)
-            ]
-            per_q.append((cands, sims))
-            flat_q.extend([query] * len(cands))
-            flat_key.extend(c.key for c in cands)
-        flat_scores = (
-            self.judge.score_pairs(flat_q, flat_key) if flat_q
-            else np.zeros(0, np.float32)
-        )
-        results = []
-        off = 0
-        for cands, sims in per_q:
-            m = len(cands)
-            scores = flat_scores[off:off + m]
-            off += m
-            if not m:
-                results.append(SeriResult(False, None, 0, 0, 0.0, sims))
-                continue
-            order = np.argsort(-scores)
-            best = float(scores[order[0]])
-            res = None
-            for j in order:
-                if scores[j] >= self.tau_lsm:
-                    res = SeriResult(True, cands[j], m, m, best, sims)
-                    break
-            results.append(res or SeriResult(False, None, m, m, best, sims))
-        return results

@@ -1,0 +1,589 @@
+"""Tiered SE storage: fp32 HOT tier + int8/zlib WARM tier (DESIGN.md §10).
+
+The single-tier cache discards every LCFU victim outright, so the next
+semantically-equal query pays the full WAN fetch even when the SE's own
+cost/latency metadata says it was worth keeping in a cheaper form. This
+module turns eviction into a *lifecycle*:
+
+  * **demote** — HOT LCFU victims move into the WARM tier: embedding
+    int8 symmetric per-row quantized (4× rows per byte), value
+    zlib-compressed, all SoA metadata (freq/cost/latency/staticity/
+    provenance) carried over, **absolute expiry preserved** — demotion
+    never extends a TTL, mirroring the federation lease rule.
+  * **warm hit** — a query whose HOT stage 1 comes up empty runs the
+    quantized coarse scan (``kernels/ann_topk_quant`` on TPU, the
+    bit-matching numpy path on CPU) followed by an fp32 rescore of the
+    top-R finalists, then the NORMAL judge gate — the two-stage Seri
+    pipeline is exactly what makes a lossy tier safe, because every warm
+    hit is re-validated before it counts.
+  * **promote** — a validated warm hit moves the entry back to HOT
+    (dequantized embedding, decompressed value), again at its original
+    absolute expiry.
+  * **true eviction** — only WARM LCFU victims (and victims too large
+    for the warm tier) leave the system; those are what
+    ``CacheStats.evictions`` counts under a :class:`TieredCache`.
+
+Capacity accounting stays value-byte-based in both tiers (embeddings are
+an HBM budget, not a cache-byte budget, matching the HOT tier's existing
+convention): a warm entry charges ``ceil(size × value_ratio)`` bytes —
+the compression-ratio-scaled footprint of its zlib'd payload — so at
+equal total bytes the warm tier retains ~1/value_ratio× more entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import pickle
+import zlib
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.cache import CortexCache
+from repro.core.se_store import SEStore
+from repro.core.semantic_element import SemanticElement
+from repro.core.seri import RowIndex, Seri, VectorIndex, topk_desc
+
+NEG = -3.0e38  # matches kernels/ann_topk_quant.NEG (masked-row sentinel)
+
+
+# --------------------------------------------------------------- quantize
+
+def quantize_rows(x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-row int8: scale = amax/127, q = rint(x/scale).
+
+    Deterministic round-half-to-even (np.rint == jnp rounding), so the
+    numpy and Pallas coarse paths score identical integers. All-zero rows
+    get scale 1.0 to avoid 0/0."""
+    x = np.asarray(x, np.float32)
+    amax = np.max(np.abs(x), axis=-1)
+    scale = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.rint(x / scale[..., None]), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def _pack(value: Any) -> bytes:
+    return zlib.compress(pickle.dumps(value, protocol=4), 6)
+
+
+def _unpack(blob: bytes) -> Any:
+    return pickle.loads(zlib.decompress(blob))
+
+
+# ------------------------------------------------------------ quant index
+
+class QuantIndex(RowIndex):
+    """Fixed-capacity int8 embedding store with two-phase retrieval.
+
+    Row management (free list, active mask, se_id mapping) comes from
+    the :class:`~repro.core.seri.RowIndex` base the hot
+    ``VectorIndex`` also uses, so the two tiers' row lifecycles agree by
+    construction. Coarse: fully-quantized matmul (int8 emb × int8 query,
+    int32 accumulate) selecting the top ``rescore_mult × k`` candidates
+    per query. Fine: fp32 query · dequantized candidate rows, which
+    removes the query-quantization error before the τ_sim gate. The
+    numpy and ``kernel`` (Pallas) backends multiply the scale factors in
+    the same order, so the coarse scores agree bit-for-bit.
+    """
+
+    def __init__(self, capacity: int, dim: int, backend: str = "numpy",
+                 rescore_mult: int = 4):
+        super().__init__(capacity, dim)
+        self.backend = backend
+        self.rescore_mult = rescore_mult
+        self.emb_q = np.zeros((capacity, dim), np.int8)
+        # int32 mirror of emb_q for the numpy coarse matmul (numpy would
+        # otherwise overflow int8 accumulation — and per-search .astype
+        # copies of the whole matrix are the hot-path cost to avoid).
+        # On TPU the kernel reads the int8 matrix directly; the mirror is
+        # a host-simulation artifact.
+        self._emb_i32 = np.zeros((capacity, dim), np.int32)
+        self.scale = np.zeros(capacity, np.float32)
+        self._kernel_fn = None
+        if backend == "kernel":
+            from repro.kernels.ops import ann_topk_quant_jit
+
+            self._kernel_fn = ann_topk_quant_jit
+
+    def add(self, se_id: int, embedding: np.ndarray) -> int:
+        row = self._alloc(se_id)
+        q, s = quantize_rows(np.asarray(embedding, np.float32)[None])
+        self.emb_q[row] = q[0]
+        self._emb_i32[row] = q[0]
+        self.scale[row] = s[0]
+        return row
+
+    def _clear_rows(self, ra: np.ndarray) -> None:
+        self.emb_q[ra] = 0
+        self._emb_i32[ra] = 0
+        self.scale[ra] = 0.0
+
+    def dequantize(self, row: int) -> np.ndarray:
+        """fp32 reconstruction, renormalized to unit length (the hot
+        index assumes unit-norm rows for cosine)."""
+        v = self.emb_q[row].astype(np.float32) * float(self.scale[row])
+        n = float(np.linalg.norm(v))
+        return v / n if n > 0 else v
+
+    # ----------------------------------------------------------- search
+
+    def search(self, q: np.ndarray, k: int, tau_sim: float):
+        return self.search_batch(q[None], k, tau_sim)[0]
+
+    def search_batch(self, q: np.ndarray, k: int, tau_sim: float):
+        """q (B, dim) fp32 unit-norm -> list of B (se_ids, sims) pairs,
+        similarity-descending, gated at tau_sim on the RESCORED sims."""
+        b = q.shape[0]
+        if len(self) == 0:
+            empty = ([], np.zeros(0, np.float32))
+            return [empty] * b
+        q = np.asarray(q, np.float32)
+        r = max(k * self.rescore_mult, k)
+        qq, qs = quantize_rows(q)
+        if self._kernel_fn is not None:
+            vals, rows = self._kernel_fn(
+                self.emb_q, self.scale, self.active, qq, qs, r
+            )
+            vals = np.asarray(vals)
+            rows = np.asarray(rows)
+        else:
+            # (B, N) row-major, same layout rationale as VectorIndex;
+            # scale multiply order matches the kernel exactly
+            s = (qq.astype(np.int32) @ self._emb_i32.T).astype(np.float32)
+            s = s * self.scale[None, :]
+            s = s * qs[:, None]
+            s = np.where(self.active[None, :], s, NEG)
+            rows, vals = topk_desc(s, r)                      # (B, r)
+        out = []
+        for i in range(b):
+            keep = vals[i] > NEG / 2          # drop masked/duplicate slots
+            rs = rows[i][keep]
+            if not len(rs):
+                out.append(([], np.zeros(0, np.float32)))
+                continue
+            # fine phase: exact fp32 query against dequantized rows
+            deq = self.emb_q[rs].astype(np.float32) * \
+                self.scale[rs][:, None]
+            sims = deq @ q[i]
+            order = np.argsort(-sims, kind="stable")[:min(k, len(rs))]
+            sims_k = sims[order].astype(np.float32)
+            gate = sims_k >= tau_sim
+            out.append(([self.row_se[j] for j in rs[order][gate]],
+                        sims_k[gate]))
+        return out
+
+
+# ------------------------------------------------------------ warm views
+
+class WarmElement:
+    """Read view onto one WARM-tier row. Mirrors the SemanticElement
+    surface the judge/engine/federation paths touch (key, value, expiry,
+    staticity, economics); ``value`` decompresses on access. A promotion
+    retires the row, after which the view is dead (``valid`` is False) —
+    consumers snapshot key/value before triggering hit accounting."""
+
+    __slots__ = ("_tier", "_row", "se_id")
+    tier = "warm"
+
+    def __init__(self, tier: "WarmTier", row: int):
+        self._tier = tier
+        self._row = int(row)
+        self.se_id = int(tier.soa.se_id[row])
+
+    @property
+    def valid(self) -> bool:
+        return int(self._tier.soa.se_id[self._row]) == self.se_id
+
+    @property
+    def key(self) -> str:
+        return self._tier.soa.key[self._row]
+
+    @property
+    def value(self) -> Any:
+        return _unpack(self._tier.soa.value[self._row])
+
+    @property
+    def size(self) -> int:
+        """ORIGINAL (uncompressed) byte size — what a transfer moves and
+        what the entry will charge once promoted back to HOT."""
+        return int(self._tier.orig_size[self._row])
+
+    @property
+    def warm_bytes(self) -> int:
+        return int(self._tier.soa.size[self._row])
+
+    @property
+    def row(self) -> int:
+        return self._row
+
+    def expired(self, now: float) -> bool:
+        return now >= self.expires_at
+
+    def __repr__(self) -> str:
+        return (f"WarmElement(se_id={self.se_id}, key={self.key!r}, "
+                f"freq={self.freq}, warm_bytes={self.warm_bytes})")
+
+
+def _warm_field(name, cast):
+    def get(self):
+        return cast(getattr(self._tier.soa, name)[self._row])
+
+    return property(get)
+
+
+for _name, _cast in (("freq", int), ("staticity", int), ("cost", float),
+                     ("latency", float), ("created_at", float),
+                     ("expires_at", float), ("last_access", float),
+                     ("prefetched", bool), ("intent", lambda v: v),
+                     ("origin", lambda v: v)):
+    setattr(WarmElement, _name, _warm_field(_name, _cast))
+
+
+# -------------------------------------------------------------- warm tier
+
+class WarmTier:
+    """Quantized/compressed second tier with its own SoA metadata.
+
+    Owns a :class:`QuantIndex` + :class:`SEStore` pair (row-aligned, same
+    free-list discipline as the hot pair) and byte accounting over the
+    COMPRESSED footprint. Mutations return counts so the owning
+    :class:`TieredCache` does all stats bookkeeping in one place.
+    """
+
+    def __init__(self, capacity_bytes: int, dim: int, *,
+                 index_capacity: int = 8192, backend: str = "numpy",
+                 value_ratio: float = 0.4, rescore_mult: int = 4):
+        # NOTE: the warm tier's extra access latency is an ENGINE-side
+        # virtual-time cost (EngineConfig.t_cache_warm, like t_cache_cpu)
+        # — it is deliberately not duplicated here
+        self.capacity_bytes = capacity_bytes
+        self.value_ratio = value_ratio
+        self.index = QuantIndex(index_capacity, dim, backend=backend,
+                                rescore_mult=rescore_mult)
+        self.soa = SEStore(index_capacity)
+        # soa.size holds the WARM (compressed) footprint for capacity and
+        # per-byte LCFU scoring; the original size rides alongside for
+        # promotion and federation transfers
+        self.orig_size = np.zeros(index_capacity, np.int64)
+        self.usage = 0
+
+    def __len__(self) -> int:
+        return len(self.soa)
+
+    def warm_size(self, orig_size: int) -> int:
+        """ceil(size × value_ratio), as DESIGN.md §10 specifies — the
+        charge never understates the compressed footprint."""
+        return max(1, math.ceil(orig_size * self.value_ratio))
+
+    def view(self, se_id: int) -> WarmElement:
+        return WarmElement(self, self.soa.id2row[se_id])
+
+    # --------------------------------------------------------- mutation
+
+    def remove_row(self, row: int) -> None:
+        """Free one warm row (promotion/purge/eviction tail; no stats)."""
+        self.usage -= int(self.soa.size[row])
+        self.index.remove_rows([row])
+        self.soa.remove_row(row)
+        self.orig_size[row] = 0
+
+    def purge_expired(self, now: float) -> int:
+        dead = self.soa.expired_rows(now)
+        for r in dead:
+            self.remove_row(int(r))
+        return len(dead)
+
+    def _make_room(self, incoming: int, now: float,
+                   eviction: str) -> tuple[int, int]:
+        """Free bytes for an incoming demotion. Returns (ttl_purged,
+        evicted) — warm victims are the cache's TRUE evictions."""
+        if self.usage + incoming <= self.capacity_bytes and \
+                not self.index.full:
+            return 0, 0
+        ttl_n = self.purge_expired(now)
+        need = self.usage + incoming - self.capacity_bytes
+        ev = 0
+        if need > 0:
+            victims = self.soa.victim_rows(now, eviction, need_bytes=need)
+            for r in victims:
+                self.remove_row(int(r))
+            ev += len(victims)
+        if self.index.full:
+            victims = self.soa.victim_rows(now, eviction, n=1)
+            for r in victims:
+                self.remove_row(int(r))
+            ev += len(victims)
+        return ttl_n, ev
+
+    def admit(self, meta: dict, emb: np.ndarray, now: float,
+              eviction: str) -> tuple[bool, int, int]:
+        """Admit one demoted SE. Returns (admitted, ttl_purged, evicted).
+
+        ``meta`` carries the full hot-tier SoA snapshot: expiry stays
+        ABSOLUTE (never re-derived from staticity), freq/last_access/
+        provenance ride along so a later promotion restores the entry
+        exactly as it left."""
+        wsize = self.warm_size(meta["size"])
+        if wsize > self.capacity_bytes:
+            return False, 0, 0
+        ttl_n, ev = self._make_room(wsize, now, eviction)
+        row = self.index.add(meta["se_id"], emb)
+        # every field rides along verbatim; only the value representation
+        # (compressed) and the charged size (compressed footprint) change
+        self.soa.add_meta(
+            row, {**meta, "value": _pack(meta["value"]), "size": wsize}
+        )
+        self.orig_size[row] = meta["size"]
+        self.usage += wsize
+        return True, ttl_n, ev
+
+    def take(self, se_id: int) -> Optional[tuple[dict, np.ndarray]]:
+        """Remove an entry and return its full metadata snapshot +
+        dequantized embedding (the promotion handoff), or None if the
+        entry vanished (evicted between stage 1 and judge completion)."""
+        row = self.soa.id2row.get(se_id)
+        if row is None:
+            return None
+        meta = self.soa.snapshot_row(row)
+        meta["value"] = _unpack(meta["value"])
+        meta["size"] = int(self.orig_size[row])
+        emb = self.index.dequantize(row)
+        self.remove_row(row)
+        return meta, emb
+
+    # ----------------------------------------------------------- search
+
+    def search_batch(self, q_embs: np.ndarray, k: int, tau_sim: float,
+                     now: float):
+        """Stage-1 over the warm tier: per query (cands, sims), sims
+        aligned with the surviving (unexpired) candidates."""
+        found = self.index.search_batch(np.asarray(q_embs), k, tau_sim)
+        out = []
+        for se_ids, sims in found:
+            keep = [
+                j for j, i in enumerate(se_ids)
+                if i in self.soa.id2row
+                and now < self.soa.expires_at[self.soa.id2row[i]]
+            ]
+            cands = [WarmElement(self, self.soa.id2row[se_ids[j]])
+                     for j in keep]
+            out.append((cands, np.asarray(sims[keep], np.float32)))
+        return out
+
+
+# ------------------------------------------------------------ tiered cache
+
+@dataclasses.dataclass
+class TierStats:
+    demotions: int = 0         # HOT victims rehomed in WARM
+    promotions: int = 0        # validated warm hits moved back to HOT
+    warm_lookups: int = 0      # queries whose stage 1 consulted WARM
+    warm_hits: int = 0         # hits served from a WARM candidate
+    warm_evictions: int = 0    # WARM LCFU victims (true evictions)
+    warm_ttl_evictions: int = 0
+    demote_drops: int = 0      # victims that could not fit in WARM
+
+
+class TieredCache(CortexCache):
+    """CortexCache whose LCFU victims demote to a WARM tier instead of
+    vanishing. ``CacheStats.evictions`` keeps meaning "left the system"
+    (warm victims + demote drops), so single-tier comparisons hold."""
+
+    def __init__(self, seri: Seri, *, warm: WarmTier, **kw):
+        super().__init__(seri, **kw)
+        self.warm = warm
+        self.tier_stats = TierStats()
+
+    # --------------------------------------------------------- lifecycle
+
+    def _demote_rows(self, rows: np.ndarray, now: float) -> None:
+        """Move hot victims into the warm tier (Algorithm 2 victims, in
+        eviction order). Already-expired victims just die (TTL count);
+        victims the warm tier cannot hold at all are true evictions."""
+        if not len(rows):
+            return
+        metas = [
+            (self.soa.snapshot_row(int(r)),
+             np.array(self.seri.index.emb[int(r)], copy=True))
+            for r in rows
+        ]
+        self._drop_rows(np.asarray(rows))
+        for meta, emb in metas:
+            if meta["expires_at"] <= now:
+                self.stats.ttl_evictions += 1
+                continue
+            ok, ttl_n, ev = self.warm.admit(meta, emb, now, self.eviction)
+            self.stats.ttl_evictions += ttl_n
+            self.tier_stats.warm_ttl_evictions += ttl_n
+            self.stats.evictions += ev
+            self.tier_stats.warm_evictions += ev
+            if ok:
+                self.tier_stats.demotions += 1
+            else:
+                self.stats.evictions += 1
+                self.tier_stats.demote_drops += 1
+
+    def _promote(self, we: WarmElement,
+                 now: float) -> Optional[SemanticElement]:
+        """Move a validated warm winner back to HOT with every field —
+        including the ABSOLUTE expiry — exactly as it left. Returns the
+        live hot view, or None if the entry vanished or expired."""
+        taken = self.warm.take(we.se_id)
+        if taken is None:
+            return None
+        meta, emb = taken
+        if meta["expires_at"] <= now:
+            self.stats.ttl_evictions += 1
+            return None
+        # hot admission may itself demote victims; the promoted entry is
+        # already out of the warm tier, so no cycle
+        self._make_room(meta["size"], now)
+        if self.seri.index.full:
+            self._evict_n(1, now)
+        row = self.seri.index.add(meta["se_id"], emb)
+        self.soa.add_meta(row, meta)
+        self.usage += meta["size"]
+        self.stats.bytes_stored = self.usage
+        self.tier_stats.promotions += 1
+        return self.store[meta["se_id"]]
+
+    # --------------------------------------------------- eviction hooks
+
+    def _retire_victims(self, victims: np.ndarray, now: float) -> None:
+        self._demote_rows(victims, now)
+
+    def purge_expired(self, now: float) -> int:
+        n = super().purge_expired(now)
+        wn = self.warm.purge_expired(now)
+        self.stats.ttl_evictions += wn
+        self.tier_stats.warm_ttl_evictions += wn
+        return n + wn
+
+    # ------------------------------------------------------------ lookup
+
+    def _stage1_blocks(self, q_embs: np.ndarray, now: float):
+        """Per-query (cands, sims): HOT stage 1 for the whole block, then
+        one batched WARM scan for exactly the queries HOT turned up empty
+        — the warm tier sits BEHIND the hot tier, not beside it. Every
+        lookup flavor (scalar, batched, engine staged) inherits this seam
+        from CortexCache, so the tiers cannot diverge per path.
+
+        Tier membership is observed at BLOCK START: a promotion triggered
+        by query j lands after query j+1's stage 1 already ran, so j+1
+        may hold a warm view of an entry that is hot by the time the
+        judge returns — ``_rebind`` redirects those to the live hot row.
+        Hit/miss outcomes match the scalar path; only the warm-consult
+        COUNT is batch-granularity dependent."""
+        q_embs = np.asarray(q_embs)
+        out, flags = super()._stage1_blocks(q_embs, now)
+        warm_qi = [bi for bi, (cands, _) in enumerate(out)
+                   if not cands and len(self.warm)]
+        if warm_qi:
+            self.tier_stats.warm_lookups += len(warm_qi)
+            wfound = self.warm.search_batch(
+                q_embs[warm_qi], self.seri.top_k, self.seri.tau_sim, now
+            )
+            for bi, (wc, wsims) in zip(warm_qi, wfound):
+                # the consult FACT (flowing back through
+                # stage1_batch_flagged) feeds the engine's per-tier
+                # latency accounting — consults that come back empty
+                # still paid the warm scan
+                flags[bi] = True
+                if wc:
+                    out[bi] = (wc, wsims)
+        return out, flags
+
+    def _rebind(self, se, now: float):
+        if se.tier == "warm":
+            if se.se_id in self.store:
+                # an earlier query in this batch (or judge micro-batch)
+                # already promoted it — bind to the live hot view
+                return self.store[se.se_id]
+            pse = self._promote(se, now)
+            if pse is not None:
+                self.tier_stats.warm_hits += 1
+            return pse
+        if se.se_id in self.store:
+            # always re-resolve through id2row: tier promotions reassign
+            # rows, so a stage-1 view's row may now hold a DIFFERENT SE
+            # (returning `se` here served the wrong entry's value once a
+            # promote→demote cycle reused its row mid-batch)
+            return self.store[se.se_id]
+        if se.se_id in self.warm.soa.id2row:
+            # a HOT candidate demoted mid-batch (an earlier promotion's
+            # make_room): the entry is alive in WARM — pull it back
+            # rather than scoring a spurious miss. Not a warm_hit: the
+            # match was discovered by the hot stage 1.
+            return self._promote(self.warm.view(se.se_id), now)
+        return None
+
+    def account_hit(self, se, now: float) -> None:
+        """The nojudge ablation hands stage-1 winners straight here; a
+        warm winner must still promote so the freq bump lands on a live
+        hot row (callers snapshot key/value first — promotion retires
+        the warm view)."""
+        if getattr(se, "tier", "hot") == "warm":
+            if se.se_id in self.store:      # already promoted this window
+                se = self.store[se.se_id]
+            else:
+                pse = self._promote(se, now)
+                if pse is None:
+                    # vanished mid-flight: count the hit, nothing to mutate
+                    self.stats.hits += 1
+                    return
+                self.tier_stats.warm_hits += 1
+                se = pse
+        super().account_hit(se, now)
+
+    def peek_semantic(self, query: str, q_emb: np.ndarray, now: float):
+        """Both tiers, hot first — federation peers can lease warm
+        entries (a warm lease carries the ORIGINAL size/value; the warm
+        copy stays put, only a promotion moves it)."""
+        se = super().peek_semantic(query, q_emb, now)
+        if se is not None or not len(self.warm):
+            return se
+        (cands, _sims), = self.warm.search_batch(
+            q_emb[None], self.seri.top_k, self.seri.tau_sim, now
+        )
+        return cands[0] if cands else None
+
+    @property
+    def total_usage(self) -> int:
+        """Bytes across both tiers (hot fp32 values + warm compressed)."""
+        return self.usage + self.warm.usage
+
+
+def make_tiered_cache(
+    *,
+    hot_bytes: int,
+    warm_bytes: int,
+    dim: int,
+    judge,
+    index_capacity: int = 8192,
+    warm_index_capacity: Optional[int] = None,
+    tau_sim: float = 0.9,
+    tau_lsm: float = 0.9,
+    top_k: int = 4,
+    eviction: str = "lcfu",
+    max_ttl: float = 3600.0,
+    backend: str = "numpy",
+    warm_backend: Optional[str] = None,
+    warm_value_ratio: float = 0.4,
+    rescore_mult: int = 4,
+) -> TieredCache:
+    """Factory mirroring ``make_cache``: hot fp32 index + seri in front of
+    an int8 warm tier. ``warm_backend`` defaults to the hot backend
+    ("kernel" → the quantized Pallas kernel)."""
+    index = VectorIndex(index_capacity, dim, backend=backend)
+    seri = Seri(index, judge, tau_sim=tau_sim, tau_lsm=tau_lsm, top_k=top_k)
+    warm = WarmTier(
+        warm_bytes, dim,
+        index_capacity=warm_index_capacity or index_capacity,
+        backend=warm_backend or backend,
+        value_ratio=warm_value_ratio,
+        rescore_mult=rescore_mult,
+    )
+    return TieredCache(
+        seri, warm=warm, capacity_bytes=hot_bytes, max_ttl=max_ttl,
+        eviction=eviction,
+    )

@@ -196,6 +196,54 @@ def swe_workload(
     return out
 
 
+def longtail_workload(
+    world: SemanticWorld,
+    n_requests: int,
+    *,
+    head_intents: int = 48,
+    head_frac: float = 0.35,
+    tail_len: int | None = None,
+    zipf_s: float = 0.9,
+    n_paraphrases: int = 30,
+    rate: float = 4.0,
+    seed: int = 0,
+) -> list[Request]:
+    """Capacity-pressure workload for the tiered-storage experiments
+    (DESIGN.md §10): a small Zipf head every request might touch, plus a
+    cyclic scan over a long tail of ``tail_len`` intents.
+
+    The scan is the classic capacity-killer: each tail intent returns
+    after a reuse distance of exactly ``tail_len`` draws, so any tier
+    whose byte budget holds fewer than ``tail_len`` values evicts the
+    entry before its next use — every tail revisit pays the WAN fetch.
+    A warm tier at the same TOTAL bytes holds ~1/value_ratio× more
+    entries, converting those refetches into demote→promote round trips.
+    Paraphrases rotate per visit so exact-match caches never hit.
+    """
+    rng = np.random.default_rng(seed)
+    if tail_len is None:
+        tail_len = world.n_intents - head_intents
+    if head_intents + tail_len > world.n_intents:
+        raise ValueError("head + tail exceeds world intents")
+    perm = rng.permutation(world.n_intents)
+    head = perm[:head_intents]
+    tail = perm[head_intents:head_intents + tail_len]
+    p_head = _zipf_probs(head_intents, zipf_s)
+    out = []
+    t = 0.0
+    pos = 0
+    for i in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        if rng.random() < head_frac:
+            intent = int(head[rng.choice(head_intents, p=p_head)])
+        else:
+            intent = int(tail[pos % tail_len])
+            pos += 1
+        q = world.query(intent, int(rng.integers(0, n_paraphrases)))
+        out.append(Request(i, t, q, session=i, n_rounds=1))
+    return out
+
+
 def region_workloads(
     world: SemanticWorld,
     n_per_region: int,

@@ -10,11 +10,12 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.kernels.ann_topk import ann_topk
+from repro.kernels.ann_topk_quant import ann_topk_quant
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention_fwd
 
-__all__ = ["ann_topk", "flash_attention_fwd", "decode_attention",
-           "ann_topk_jit"]
+__all__ = ["ann_topk", "ann_topk_quant", "flash_attention_fwd",
+           "decode_attention", "ann_topk_jit", "ann_topk_quant_jit"]
 
 
 _B_ALIGN = 8  # fp32 sublane count: pad the query block to aligned shapes
@@ -43,3 +44,23 @@ def ann_topk_jit(emb, active, q, k: int = 4):
     if single:
         return vals[0], rows[0]
     return vals, rows
+
+
+def ann_topk_quant_jit(emb_q, scales, active, qq, q_scales, k: int = 16):
+    """Warm-tier QuantIndex backend adapter (coarse phase only).
+
+    Queries arrive already int8-quantized — the host quantizes them with
+    the same routine the numpy path uses, so both backends score identical
+    integers. B is padded to the sublane multiple like ``ann_topk_jit``;
+    padded query lanes carry scale 0 (all-zero scores) and are sliced off.
+    """
+    b = qq.shape[0]
+    pad = (-b) % _B_ALIGN
+    if pad:
+        qq = jnp.pad(jnp.asarray(qq), ((0, pad), (0, 0)))
+        q_scales = jnp.pad(jnp.asarray(q_scales), (0, pad))
+    vals, rows = ann_topk_quant(
+        jnp.asarray(emb_q), jnp.asarray(scales), jnp.asarray(active),
+        jnp.asarray(qq), jnp.asarray(q_scales), k,
+    )
+    return vals[:b], rows[:b]

@@ -11,20 +11,25 @@ import json
 
 from repro.core.cache import make_cache
 from repro.core.judge import OracleJudge
-from repro.data.workloads import swe_workload, trend_workload, zipf_workload
+from repro.core.tiers import make_tiered_cache
+from repro.data.workloads import (longtail_workload, swe_workload,
+                                  trend_workload, zipf_workload)
 from repro.data.world import SemanticWorld
 from repro.serving.engine import Engine, EngineConfig, ExactCache
 from repro.serving.gpu import GPU, GPUConfig
 from repro.serving.remote import RemoteDataService
 
 
-def build_workload(world, name: str, n: int, seed: int, zipf_s: float = 0.99):
+def build_workload(world, name: str, n: int, seed: int, zipf_s: float = 0.99,
+                   tail_len: int | None = None):
     if name == "zipf":
         return zipf_workload(world, n, seed=seed, zipf_s=zipf_s)
     if name == "trend":
         return trend_workload(world, n, seed=seed)
     if name == "swe":
         return swe_workload(world, max(n // 5, 1), seed=seed)
+    if name == "longtail":
+        return longtail_workload(world, n, seed=seed, tail_len=tail_len)
     raise ValueError(name)
 
 
@@ -48,18 +53,35 @@ def run_once(
     em_p_base: float = 0.79,
     judge_timeout: float = 0.25,
     warmup_frac: float = 0.0,
+    warm_frac: float | None = None,
+    warm_value_ratio: float = 0.4,
+    warm_access_latency: float = 0.01,
+    tail_len: int | None = None,
     seed: int = 0,
 ) -> dict:
     world = SemanticWorld(n_intents=n_intents, dim=dim, seed=seed)
-    reqs = build_workload(world, workload, n_requests, seed + 1, zipf_s=zipf_s)
+    reqs = build_workload(world, workload, n_requests, seed + 1,
+                          zipf_s=zipf_s, tail_len=tail_len)
     cap = int(cache_ratio * world._sizes.sum())
     cache = exact = None
     if mode in ("cortex", "cortex-nojudge"):
         judge = OracleJudge(world, accuracy=judge_acc, seed=seed + 2)
-        cache = make_cache(
-            capacity_bytes=cap, dim=dim, judge=judge, eviction=eviction,
-            max_ttl=max_ttl,
-        )
+        if warm_frac:
+            # tiered storage at EQUAL total bytes: the warm slice comes
+            # OUT of the same budget, it is never additional capacity
+            warm_bytes = int(cap * warm_frac)
+            # the warm tier's extra access latency is an engine-side
+            # virtual-time cost: EngineConfig.t_cache_warm (below)
+            cache = make_tiered_cache(
+                hot_bytes=cap - warm_bytes, warm_bytes=warm_bytes,
+                dim=dim, judge=judge, eviction=eviction, max_ttl=max_ttl,
+                warm_value_ratio=warm_value_ratio,
+            )
+        else:
+            cache = make_cache(
+                capacity_bytes=cap, dim=dim, judge=judge, eviction=eviction,
+                max_ttl=max_ttl,
+            )
     elif mode == "exact":
         exact = ExactCache(cap, max_ttl=max_ttl)
     eng = Engine(
@@ -77,6 +99,7 @@ def run_once(
             em_p_base=em_p_base,
             judge_timeout=judge_timeout,
             warmup_frac=warmup_frac,
+            t_cache_warm=warm_access_latency,
             seed=seed + 4,
         ),
     )
@@ -86,7 +109,10 @@ def run_once(
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="zipf",
-                    choices=["zipf", "trend", "swe"])
+                    choices=["zipf", "trend", "swe", "longtail"])
+    ap.add_argument("--warm-frac", type=float, default=None,
+                    help="split this fraction of the byte budget into an "
+                         "int8/zlib warm tier (DESIGN.md §10)")
     ap.add_argument("--mode", default="cortex",
                     choices=["vanilla", "exact", "cortex", "cortex-nojudge"])
     ap.add_argument("--n-requests", type=int, default=800)
@@ -113,6 +139,7 @@ def main(argv=None):
         colocated=not args.dedicated_judge,
         recalibrate_every=args.recalibrate_every,
         prefetch=not args.no_prefetch,
+        warm_frac=args.warm_frac,
         seed=args.seed,
     )
     print(json.dumps(s, indent=2, default=float))

@@ -50,6 +50,8 @@ class EngineConfig:
     judge_batch_max: int = 8            # judge micro-batch size cap (§4.4)
     judge_batch_marginal: float = 0.5   # marginal prefill cost per co-batched req
     cache_access_latency: float = 0.0   # RTT to a non-local (global) cache
+    t_cache_warm: float = 0.01          # extra stage-1 latency when the
+                                        # WARM tier is consulted (§10)
     closed_loop: Optional[int] = None   # concurrency, or None = open loop
     prefetch: bool = True
     prefetch_confidence: float = 0.55
@@ -285,28 +287,66 @@ class Engine:
         now = self._now
         queries = [q for _, q, _ in batch]
         q_embs = np.stack([self.world.embed(q) for q in queries])
-        cands_block = self.cache.stage1_batch(queries, q_embs, now)
-        for (st, q, t0), cands in zip(batch, cands_block):
-            st.rec.cache_time += now - t0
-            if not cands:
-                self.cache.miss_no_candidates()
-                self._go_remote(st)
+        # every warm CONSULT pays the tier's extra access latency before
+        # proceeding (§10 per-tier stage-1 cost) — including consults
+        # that came back empty. The cache reports the consult fact per
+        # query; the engine must not re-derive that policy.
+        cands_block, consults = self.cache.stage1_batch_flagged(
+            queries, q_embs, now
+        )
+        deferred = []
+        for (st, q, t0), cands, warm in zip(batch, cands_block, consults):
+            if warm:
+                deferred.append((st, q, t0, cands))
                 continue
-            if self.mode == "cortex-nojudge":
-                # ANN-only ablation: accept nearest candidate blindly —
-                # but through the SHARED hit accounting, so prefetch_hits
-                # and freq bookkeeping stay comparable with full cortex
-                se = cands[0]
-                self.cache.account_hit(se, now)
-                st.rec.cache_hits += 1
-                self._after_validated(st, se.key)
-                self._observe(st, se.value, from_cache=True)
-                continue
-            self._judge_request(st, q, cands)
+            self._stage1_resolve(st, q, t0, cands, now)
+        if deferred:
+            self._push(
+                now + self.cfg.t_cache_warm,
+                lambda now2, d=deferred: self._warm_resolve(d, now2),
+            )
         # one dispatch for the whole flush: requests that arrived in the
         # same stage-1 window ride the same judge micro-batch (dispatching
         # inside _judge_request would submit solo batches whenever the
         # judge lane has free slots)
+        self._dispatch_judges()
+
+    def _stage1_resolve(self, st: _ReqState, q: str, t0: float, cands,
+                        now: float):
+        st.rec.cache_time += now - t0
+        if not cands:
+            self.cache.miss_no_candidates()
+            self._go_remote(st)
+            return
+        if self.mode == "cortex-nojudge":
+            # ANN-only ablation: accept nearest candidate blindly —
+            # but through the SHARED hit accounting, so prefetch_hits
+            # and freq bookkeeping stay comparable with full cortex.
+            # Snapshot key/value FIRST: accounting a warm winner
+            # promotes it, which retires the warm row behind the view.
+            se = cands[0]
+            key, value = se.key, se.value
+            self.cache.account_hit(se, now)
+            st.rec.cache_hits += 1
+            self._after_validated(st, key)
+            self._observe(st, value, from_cache=True)
+            return
+        self._judge_request(st, q, cands)
+
+    def _warm_resolve(self, deferred, now: float):
+        """Warm-consulting requests resume after t_cache_warm; their
+        judge jobs dispatch as one micro-batch of their own. Candidates
+        are re-examined: clock events between the flush and this wakeup
+        may have promoted a warm view (rebind to the live hot row — it
+        is still a perfectly good candidate), evicted it, or expired it."""
+        for st, q, t0, cands in deferred:
+            live = []
+            for c in cands:
+                if not c.valid and c.se_id in self.cache.store:
+                    c = self.cache.store[c.se_id]  # promoted meanwhile
+                if c.valid and not c.expired(now):
+                    live.append(c)
+            self._stage1_resolve(st, q, t0, live, now)
         self._dispatch_judges()
 
     def _judge_request(self, st: _ReqState, q: str, cands):
@@ -642,6 +682,17 @@ class Engine:
                 judge_calls=s.judge_calls,
                 cache_items=len(self.cache),
             )
+            ts = getattr(self.cache, "tier_stats", None)
+            if ts is not None:  # tiered storage (DESIGN.md §10)
+                out.update(
+                    demotions=ts.demotions,
+                    promotions=ts.promotions,
+                    warm_lookups=ts.warm_lookups,
+                    warm_hits=ts.warm_hits,
+                    warm_evictions=ts.warm_evictions,
+                    warm_items=len(self.cache.warm),
+                    warm_bytes=self.cache.warm.usage,
+                )
         elif self.mode == "exact" and self.exact is not None:
             out.update(hit_rate=self.exact.hit_rate)
         else:

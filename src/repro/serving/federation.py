@@ -84,6 +84,7 @@ class FederationStats:
     transfer_cost: float = 0.0
     expired_leases: int = 0   # positive peeks whose lease died in flight
     origin_fetches: int = 0
+    warm_leases: int = 0      # positive peeks served from a WARM tier
 
 
 @dataclasses.dataclass
@@ -163,8 +164,13 @@ class Federation:
         as of NOW (no judge, no stats mutation on the peer)."""
         lease = None
         if not state["decided"]:  # decided = probe logically cancelled
+            # a tiered peer consults BOTH tiers: warm entries are
+            # leasable too (the lease carries the decompressed value and
+            # the ORIGINAL size — the transfer ships a full value)
             se = peer.cache.peek_semantic(q, q_emb, self.clock.now)
             if se is not None:
+                if getattr(se, "tier", "hot") == "warm":
+                    self.stats.warm_leases += 1
                 lease = _Lease(
                     value=se.value,
                     expires_at=float(se.expires_at),
@@ -255,6 +261,7 @@ class FederationRunner:
         judge_acc: float = 0.98,
         engine_cfg: Optional[EngineConfig] = None,
         gpu_cfg: Optional[GPUConfig] = None,
+        warm_frac: Optional[float] = None,
         seed: int = 0,
     ):
         if topology not in ("local", "peered", "global"):
@@ -270,15 +277,29 @@ class FederationRunner:
         footprint = int(world._sizes.sum())
         base_cfg = engine_cfg or EngineConfig()
 
+        def build_cache(capacity: int, judge) -> CortexCache:
+            # warm_frac splits each region's byte budget into a tiered
+            # hot+warm pair at EQUAL total bytes (DESIGN.md §10) — peers
+            # can then lease each other's warm entries via peek_semantic
+            if warm_frac:
+                from repro.core.tiers import make_tiered_cache
+
+                warm_bytes = int(capacity * warm_frac)
+                return make_tiered_cache(
+                    hot_bytes=capacity - warm_bytes, warm_bytes=warm_bytes,
+                    dim=world.dim, judge=judge,
+                )
+            return make_cache(
+                capacity_bytes=capacity, dim=world.dim, judge=judge,
+            )
+
         self.regions: list[Region] = []
         shared_cache = None
         if topology == "global":
             judge = OracleJudge(world, accuracy=judge_acc, seed=seed + 7)
-            shared_cache = make_cache(
-                capacity_bytes=sum(
-                    int(rc.cache_ratio * footprint) for rc in region_cfgs
-                ),
-                dim=world.dim, judge=judge,
+            shared_cache = build_cache(
+                sum(int(rc.cache_ratio * footprint) for rc in region_cfgs),
+                judge,
             )
         for rid, rc in enumerate(region_cfgs):
             if shared_cache is not None:
@@ -287,9 +308,8 @@ class FederationRunner:
                 judge = OracleJudge(
                     world, accuracy=judge_acc, seed=seed + 101 * (rid + 1)
                 )
-                cache = make_cache(
-                    capacity_bytes=int(rc.cache_ratio * footprint),
-                    dim=world.dim, judge=judge,
+                cache = build_cache(
+                    int(rc.cache_ratio * footprint), judge,
                 )
             remote = RemoteDataService(
                 lat_lo=rc.wan_lat_lo, lat_hi=rc.wan_lat_hi,
@@ -383,6 +403,7 @@ class FederationRunner:
             "peer_hit_rate": _ratio(fs.peer_hits, fs.peeks),
             "transfer_bytes": fs.transfer_bytes,
             "expired_leases": fs.expired_leases,
+            "warm_leases": fs.warm_leases,
         }
         return {"aggregate": agg, "regions": per_region}
 

@@ -147,6 +147,40 @@ def test_nearest_holder_wins():
     assert res["origin"] == 2                    # the 0.05s peer, not 0.2s
 
 
+def test_peer_leases_warm_tier_entry():
+    """peek_semantic consults BOTH tiers (DESIGN.md §10): a sibling's
+    warm entry is leasable — the lease carries the decompressed value
+    and ORIGINAL size, and the source copy stays warm (peer peeks never
+    promote)."""
+    from repro.core.tiers import make_tiered_cache
+
+    fed, clock, regions, engines = _mk_federation(rtt=0.08)
+    judge = OracleJudge(WORLD, accuracy=1.0, seed=1)
+    tiered = make_tiered_cache(hot_bytes=500, warm_bytes=50_000,
+                               dim=WORLD.dim, judge=judge,
+                               index_capacity=128)
+    regions[1].cache = tiered
+    q = WORLD.query(5, 0)
+    se = tiered.insert(q, WORLD.embed(q), WORLD.fetch(q), now=0.0,
+                       cost=0.005, latency=0.4, size=100, staticity=7,
+                       ttl=500.0)
+    for i in range(6, 12):   # hot pressure pushes intent 5 into WARM
+        qi = WORLD.query(i, 0)
+        tiered.insert(qi, WORLD.embed(qi), WORLD.fetch(qi), now=1.0,
+                      cost=0.005, latency=0.4, size=100, staticity=7,
+                      ttl=500.0)
+    assert se.se_id in tiered.warm.soa.id2row
+    fed.route(engines[0], object(), WORLD.query(5, 1), 0.0)
+    _drain(clock)
+    res = engines[0].results[-1]
+    assert res["value"] == WORLD.fetch(q)
+    assert res["size"] == 100                 # original, not compressed
+    assert res["origin"] == 1
+    assert fed.stats.warm_leases == 1
+    assert fed.stats.peer_hits == 1
+    assert se.se_id in tiered.warm.soa.id2row  # source copy stayed warm
+
+
 def test_peering_disabled_goes_straight_to_origin():
     fed, clock, regions, engines = _mk_federation(peering=False)
     _seed_peer(regions[1], WORLD.query(5, 0))

@@ -193,6 +193,50 @@ def test_ttl_purge_is_masked_and_exact():
     assert cache.stats.ttl_evictions == n
 
 
+def test_retrieve_sims_aligned_with_surviving_candidates():
+    """When stage 1 returns candidates and some expire, ``sims[j]`` must
+    stay the similarity of ``cands[j]`` — the expired candidate's sim is
+    dropped with it (previously sims kept stage-1 order and misaligned)."""
+    cache = _fresh(seed=13, max_ttl=3600.0)
+    now = 0.0
+    q_short = WORLD.query(0, 0)
+    q_long = WORLD.query(0, 1)
+    cache.insert(q_short, WORLD.embed(q_short), WORLD.fetch(q_short),
+                 now=now, cost=0.01, latency=0.4, size=100, ttl=50.0)
+    cache.insert(q_long, WORLD.embed(q_long), WORLD.fetch(q_long),
+                 now=now, cost=0.01, latency=0.4, size=100, ttl=5000.0)
+    probe = WORLD.query(0, 2)
+    p_emb = WORLD.embed(probe)
+    # both paraphrases are live: two candidates, two sims
+    res = cache.lookup(probe, p_emb, 10.0)
+    assert res.n_candidates == 2 and len(res.sims) == 2
+    # after the short-TTL entry expires: ONE candidate — and the one sim
+    # returned must be the survivor's own cosine, not the stage-1 best
+    res = cache.lookup(probe, p_emb, 100.0)
+    assert res.n_candidates == 1
+    assert len(res.sims) == res.n_candidates
+    np.testing.assert_allclose(
+        res.sims[0], float(p_emb @ WORLD.embed(q_long)), rtol=1e-5
+    )
+
+
+def test_sestore_add_rejects_active_row():
+    """Clobbering a live row corrupted id2row (the displaced SE's entry
+    kept pointing at a row describing a different element)."""
+    store = SEStore(4)
+    kw = dict(key="k", value="v", staticity=5, cost=0.01, latency=0.1,
+              size=10, created_at=0.0, expires_at=100.0, freq=1,
+              last_access=0.0, prefetched=False, intent=None)
+    store.add(2, 7, **kw)
+    with pytest.raises(ValueError, match="already holds live SE 7"):
+        store.add(2, 8, **kw)
+    # the original mapping is intact and a freed row is reusable again
+    assert store.id2row == {7: 2}
+    store.remove_row(2)
+    store.add(2, 8, **kw)
+    assert store.id2row == {8: 2}
+
+
 def test_exact_cache_refreshes_stale_entry():
     """Reinserting a key must refresh value and TTL — an expired entry
     previously stuck forever and the key could never hit again."""
