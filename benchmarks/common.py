@@ -21,11 +21,15 @@ DATASETS = {
 ROWS: list[dict] = []
 
 
-def emit(name: str, us_per_call: float, **derived):
+def emit(name: str, us_per_call: float, *, seed=None, **derived):
+    """One benchmark row. ``seed`` lands as a first-class field in the
+    --json BENCH_*.json rows (alongside the git_sha benchmarks/run.py
+    stamps at write time) so cross-PR trajectory diffs can tell a code
+    change from a seed change; None = not seed-parameterized."""
     kv = " ".join(f"{k}={v}" for k, v in derived.items())
     print(f"{name},{us_per_call:.1f},{kv}")
     ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
-                 "derived": derived})
+                 "seed": seed, "derived": derived})
 
 
 def run_ds(dataset: str, mode: str, **kw):

@@ -204,6 +204,7 @@ def federation_sweep(smoke: bool = False):
         a = r.run()["aggregate"]
         results[topo] = a
         emit(f"federation/{topo}", a["latency_mean"] * 1e6,
+             seed=23,
              lat_ms=round(a["latency_mean"] * 1e3, 1),
              remote_ms=round(a["remote_time_mean"] * 1e3, 1),
              hit=round(a["hit_rate"], 3),
@@ -214,7 +215,7 @@ def federation_sweep(smoke: bool = False):
     gain = 1 - results["peered"]["remote_time_mean"] / max(
         results["local"]["remote_time_mean"], 1e-9
     )
-    emit("federation/peering_gain", 0.0,
+    emit("federation/peering_gain", 0.0, seed=23,
          remote_time_reduction=round(gain, 4))
     if results["peered"]["remote_time_mean"] >= \
             results["local"]["remote_time_mean"]:
@@ -292,11 +293,13 @@ def tiered_sweep(smoke: bool = False):
             )
         results[tail] = (hot, warm)
         emit(f"tiered/hot_only@t{tail}", hot["latency_mean"] * 1e6,
+             seed=31,
              hit=round(hot["hit_rate"], 3),
              api=hot["api_calls"],
              api_cost=round(hot["api_cost"], 3),
              evictions=hot["evictions"])
         emit(f"tiered/hot_warm@t{tail}", warm["latency_mean"] * 1e6,
+             seed=31,
              hit=round(warm["hit_rate"], 3),
              api=warm["api_calls"],
              api_cost=round(warm["api_cost"], 3),
@@ -313,6 +316,123 @@ def tiered_sweep(smoke: bool = False):
                 f"hit {warm['hit_rate']:.3f} vs {hot['hit_rate']:.3f}, "
                 f"cost {warm['api_cost']:.3f} vs {hot['api_cost']:.3f})"
             )
+    return results
+
+
+def freshness_sweep(smoke: bool = False):
+    """Freshness frontier (DESIGN.md §11): churn rate × TTL policy on the
+    churn workload against a MutableWorld, charting accuracy vs hit rate.
+
+    Three policies at each churn period (class-1 intents update every
+    ``churn`` seconds, class-10 every ``8×churn``):
+
+      * ``ttl``    — staticity TTLs only, no invalidation (the pre-§11
+                     cache: stale values serve until they age out);
+      * ``inval``  — change-feed invalidation, stale entries dropped;
+      * ``refresh``— invalidation + refresh-ahead (hot entries
+                     revalidate in place; TTL expiry renews instead of
+                     purging).
+
+    ``judge_acc=1.0`` so info_accuracy isolates STALENESS (judge-error
+    accuracy is fig13's axis). Gates (CI runs ``--smoke``):
+    ``stale_hit_rate(inval) < stale_hit_rate(ttl)``, refresh must hold
+    info_accuracy within 2 points of the no-cache baseline while
+    keeping steady-state hit rate ABOVE ttl-only, two same-seed refresh
+    runs must be bit-identical, and a static-world run must report
+    exactly 0 stale hits.
+    """
+    import json as _json
+
+    seed = 41
+    churns = (20.0,) if smoke else (10.0, 20.0, 40.0)
+    base = dict(
+        workload="churn", mode="cortex", n_requests=500, n_intents=200,
+        dim=64, concurrency=8, seed=seed, max_ttl=60.0, qpm=None,
+        judge_acc=1.0, prefetch=False, warmup_frac=0.3,
+    )
+    policies = (
+        ("ttl", dict()),
+        ("inval", dict(invalidation=True)),
+        ("refresh", dict(invalidation=True, refresh_ahead=True)),
+    )
+
+    # static-world regression guard: churn off => stale_hits exactly 0
+    static = run_once(invalidation=True, refresh_ahead=True, **base)
+    emit("freshness/static_guard", 0.0, seed=seed,
+         stale_hits=static["stale_hits"], refreshes=static["refreshes"])
+    if static["stale_hits"] != 0:
+        raise SystemExit(
+            "freshness regression: stale_hits must be exactly 0 when "
+            f"churn is disabled (got {static['stale_hits']})"
+        )
+
+    # one no-cache baseline at the gate cell: vanilla always fetches
+    # fresh, so its info_accuracy doesn't depend on the policy grid
+    van = run_once(**{**base, "mode": "vanilla", "churn_period": 20.0,
+                      "churn_max_period": 160.0})
+
+    results = {}
+    for churn in churns:
+        ck = dict(base, churn_period=churn, churn_max_period=churn * 8.0)
+        for name, pol in policies:
+            s = run_once(**ck, **pol)
+            results[(churn, name)] = s
+            emit(f"freshness/{name}@c{churn:g}", s["latency_mean"] * 1e6,
+                 seed=seed,
+                 hit_steady=round(s["hit_rate_steady"], 3),
+                 stale_rate=round(s["stale_hit_rate"], 3),
+                 info_acc=round(s["info_accuracy"], 3),
+                 refreshes=s.get("refreshes", 0),
+                 invalidations=s["invalidations"],
+                 refresh_cost=round(s.get("refresh_cost", 0.0), 3),
+                 api_cost=round(s["api_cost"], 3))
+        s2 = run_once(**ck, invalidation=True, refresh_ahead=True)
+        if _json.dumps(results[(churn, "refresh")], sort_keys=True,
+                       default=float) != \
+                _json.dumps(s2, sort_keys=True, default=float):
+            raise SystemExit(
+                "freshness regression: two same-seed refresh runs "
+                f"diverged (churn={churn:g}) — summaries must be "
+                "bit-identical"
+            )
+
+    for churn in churns:
+        ttl = results[(churn, "ttl")]
+        inval = results[(churn, "inval")]
+        refresh = results[(churn, "refresh")]
+        emit(f"freshness/frontier@c{churn:g}", 0.0, seed=seed,
+             ttl_acc=round(ttl["info_accuracy"], 3),
+             refresh_acc=round(refresh["info_accuracy"], 3),
+             acc_recovered=round(
+                 refresh["info_accuracy"] - ttl["info_accuracy"], 3
+             ),
+             hit_delta=round(
+                 refresh["hit_rate_steady"] - ttl["hit_rate_steady"], 3
+             ))
+        if inval["stale_hit_rate"] >= ttl["stale_hit_rate"]:
+            raise SystemExit(
+                "freshness regression: invalidation must cut the stale-"
+                f"hit rate below the no-invalidation baseline (churn="
+                f"{churn:g}: {inval['stale_hit_rate']:.3f} vs "
+                f"{ttl['stale_hit_rate']:.3f})"
+            )
+    # frontier gate on the reference cell (churn=20): refresh-ahead must
+    # recover accuracy to within 2 points of no-cache WITHOUT giving up
+    # the hit rate the ttl-only policy only achieves by serving stale
+    ttl = results[(20.0, "ttl")]
+    refresh = results[(20.0, "refresh")]
+    if refresh["info_accuracy"] < van["info_accuracy"] - 0.02:
+        raise SystemExit(
+            "freshness regression: invalidation+refresh info_accuracy "
+            f"({refresh['info_accuracy']:.3f}) fell more than 2 points "
+            f"below the no-cache baseline ({van['info_accuracy']:.3f})"
+        )
+    if refresh["hit_rate_steady"] <= ttl["hit_rate_steady"]:
+        raise SystemExit(
+            "freshness regression: invalidation+refresh steady-state hit "
+            f"rate ({refresh['hit_rate_steady']:.3f}) must exceed "
+            f"ttl-only ({ttl['hit_rate_steady']:.3f})"
+        )
     return results
 
 

@@ -14,10 +14,29 @@ fails the run.
 import argparse
 import inspect
 import json
+import os
+import subprocess
 import sys
 import time
 
 from benchmarks import common, figures, kernels_bench
+
+
+def git_sha() -> str:
+    """Short commit id of the repo the benchmark ran from, for the
+    BENCH_*.json trajectory (rows from different PRs must be tellable
+    apart even after the artifacts are copied around)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except Exception:
+        return "unknown"
+
 
 ALL = {
     "fig7": figures.fig7_skewed,
@@ -34,6 +53,7 @@ ALL = {
     "recal": figures.recalibration_overhead,
     "federation": figures.federation_sweep,
     "tiered": figures.tiered_sweep,
+    "freshness": figures.freshness_sweep,
     "kernel_ann": kernels_bench.kernel_ann,
     "kernel_flash": kernels_bench.kernel_flash,
     "cache_path": kernels_bench.cache_path_calibration,
@@ -51,6 +71,7 @@ def main() -> None:
                     help="also write BENCH_<name>.json per benchmark")
     args = ap.parse_args()
     names = list(ALL) if not args.only else args.only.split(",")
+    sha = git_sha() if args.json else "unknown"
     print("name,us_per_call,derived")
     t0 = time.time()
     for n in names:
@@ -67,10 +88,14 @@ def main() -> None:
                 fn()
         finally:
             # write rows even when a regression gate SystemExits, so a
-            # failing CI run still leaves the measurements behind
+            # failing CI run still leaves the measurements behind. Every
+            # row is stamped with the git sha (and carries its seed when
+            # the benchmark is seed-parameterized) so BENCH_*.json files
+            # from different PRs diff cleanly.
             if args.json:
+                rows = [dict(r, git_sha=sha) for r in common.ROWS]
                 with open(f"BENCH_{n}.json", "w") as f:
-                    json.dump({"name": n, "rows": list(common.ROWS)}, f,
+                    json.dump({"name": n, "git_sha": sha, "rows": rows}, f,
                               indent=1, default=str)
         print(f"# {n} done in {time.time()-t:.1f}s", file=sys.stderr)
     print(f"# all benchmarks done in {time.time()-t0:.1f}s", file=sys.stderr)

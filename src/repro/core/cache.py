@@ -38,6 +38,7 @@ class CacheStats:
     insertions: int = 0
     evictions: int = 0
     ttl_evictions: int = 0
+    invalidations: int = 0    # dropped by change-feed notice (freshness)
     judge_calls: int = 0
     prefetch_inserts: int = 0
     prefetch_hits: int = 0
@@ -68,6 +69,10 @@ class CortexCache:
         self.usage = 0
         self.stats = CacheStats()
         self._next_id = 0
+        # freshness seam: the tiered cache fires this when a warm entry
+        # re-enters HOT, so the FreshnessManager can re-arm its
+        # refresh-ahead timer (the timer dies while an entry sits warm)
+        self.on_promote = None
 
     @property
     def rows(self) -> dict[int, int]:
@@ -102,9 +107,12 @@ class CortexCache:
         )
         out = []
         for se_ids, sims in found:
+            # revalidating rows are KNOWN stale (change-feed notice,
+            # refetch in flight) — a miss now is a correct answer later
             keep = [
                 j for j, i in enumerate(se_ids)
                 if i in self.store and not self.store[i].expired(now)
+                and not self.store[i].revalidating
             ]
             out.append(([self.store[se_ids[j]] for j in keep],
                         np.asarray(sims[keep], np.float32)))
@@ -176,9 +184,14 @@ class CortexCache:
 
     def _rebind(self, se, now: float):
         """Return the live HOT-tier view for a judge-validated winner, or
-        None if it vanished between stage 1 and judge completion. The
-        tiered subclass overrides this to promote warm-tier winners."""
-        return se if se.se_id in self.store else None
+        None if it vanished between stage 1 and judge completion — or
+        went revalidating meanwhile (serving it would serve known-stale
+        knowledge). The tiered subclass overrides this to promote
+        warm-tier winners."""
+        if se.se_id not in self.store:
+            return None
+        live = self.store[se.se_id]
+        return None if live.revalidating else live
 
     def finalize(self, query: str, cands, scores, now: float,
                  sims: Optional[np.ndarray] = None) -> SeriResult:
@@ -218,6 +231,8 @@ class CortexCache:
         intent: Optional[int] = None,
         ttl: Optional[float] = None,
         origin: Optional[int] = None,
+        version: int = 0,
+        fetched_at: Optional[float] = None,
     ) -> SemanticElement:
         # `is None`, not truthiness: staticity 0 is a legitimate caller
         # override and must not trigger a judge re-estimate
@@ -251,6 +266,8 @@ class CortexCache:
             prefetched=prefetched,
             intent=intent,
             origin=origin,
+            version=version,
+            fetched_at=fetched_at,
         )
         self.usage += size
         self.stats.insertions += 1
@@ -295,7 +312,7 @@ class CortexCache:
         for i in se_ids:  # similarity-descending
             if i in self.store:
                 se = self.store[i]
-                if not se.expired(now):
+                if not se.expired(now) and not se.revalidating:
                     return se
         return None
 
@@ -303,6 +320,61 @@ class CortexCache:
                           now: float) -> bool:
         """Peek (no stats, no freq bump) — used by the prefetcher."""
         return self.peek_semantic(query, q_emb, now) is not None
+
+    # --------------------------------------------------------- freshness
+    # Mechanism only — the *policy* (drop vs revalidate, who refreshes a
+    # federated copy) lives in core/freshness.py:FreshnessManager.
+
+    def ses_for_intent(self, intent) -> list:
+        """Live SE views whose admission-time intent equals ``intent``,
+        in se_id (insertion) order — the invalidation fan-out set,
+        O(matching) via the store's intent index. The tiered subclass
+        appends its warm-tier views."""
+        ids = self.soa.by_intent.get(intent)
+        return [self.store[i] for i in sorted(ids)] if ids else []
+
+    def has_intent(self, intent) -> bool:
+        """Any live entry for this intent? O(1) — the change feed's
+        keep-watching predicate."""
+        return intent in self.soa.by_intent
+
+    def invalidate_se(self, se_id: int, now: float) -> bool:
+        """Drop one entry because its origin knowledge changed. Counted
+        as ``invalidations`` — NOT an eviction (it did not lose a
+        capacity contest) and NOT a TTL lapse. Never demotes: a
+        known-stale value is not worth keeping in any tier."""
+        row = self.soa.id2row.get(se_id)
+        if row is None:
+            return False
+        self._drop_rows(np.asarray([row]))
+        self.stats.invalidations += 1
+        return True
+
+    def refresh_entry(self, se_id: int, *, value: Any, version: int,
+                      now: float,
+                      ttl: Optional[float] = None
+                      ) -> Optional[SemanticElement]:
+        """Revalidate an entry IN PLACE: new value + version, fetch
+        timestamp bumped, expiry renewed (staticity-derived TTL unless
+        given). The row, se_id, embedding, and hit statistics all
+        survive — live ``SemanticElement`` views across the refresh keep
+        working, which is what lets refresh-ahead renew an entry while a
+        judge micro-batch still holds views on it. Size is unchanged by
+        construction (a refresh re-fetches the same intent's value)."""
+        row = self.soa.id2row.get(se_id)
+        if row is None:
+            return None
+        if ttl is None:
+            ttl = ttl_from_staticity(
+                int(self.soa.staticity[row]), self.max_ttl, self.min_ttl
+            )
+        self.soa.value[row] = value
+        self.soa.version[row] = version
+        self.soa.fetched_at[row] = now
+        self.soa.freq_at_fetch[row] = self.soa.freq[row]
+        self.soa.expires_at[row] = now + ttl
+        self.soa.revalidating[row] = False
+        return self.store[se_id]
 
     # ------------------------------------------------------------ evict
 

@@ -45,6 +45,19 @@ class SEStore:
         self.cost = np.zeros(capacity, np.float64)
         self.latency = np.zeros(capacity, np.float64)
         self.staticity = np.zeros(capacity, np.int32)
+        # freshness metadata (core/freshness.py): the origin knowledge
+        # version this value was fetched at, and when the fetch happened
+        # (refreshes update it; created_at keeps the first admission).
+        # ``revalidating`` marks a row KNOWN stale (change-feed notice)
+        # whose refetch is in flight — non-servable until refreshed.
+        # ``freq_at_fetch`` snapshots freq at the last (re)fetch, so
+        # "hits earned since last renewal" is freq - freq_at_fetch —
+        # the refresh-ahead worthiness signal (lifetime freq would renew
+        # dead entries forever).
+        self.version = np.zeros(capacity, np.int64)
+        self.fetched_at = np.zeros(capacity, np.float64)
+        self.freq_at_fetch = np.zeros(capacity, np.int64)
+        self.revalidating = np.zeros(capacity, bool)
         self.prefetched = np.zeros(capacity, bool)
         self.active = np.zeros(capacity, bool)
         self.key = np.empty(capacity, object)
@@ -54,12 +67,16 @@ class SEStore:
         # fetched from the origin service by this cache's own region)
         self.origin = np.empty(capacity, object)
         self.id2row: dict[int, int] = {}
+        # intent -> live se_ids: O(matching) change-feed fan-out instead
+        # of an O(n) scan per invalidation notice
+        self.by_intent: dict = {}
 
     # ---------------------------------------------------------- mutation
 
     def add(self, row: int, se_id: int, *, key, value, staticity, cost,
             latency, size, created_at, expires_at, freq, last_access,
-            prefetched, intent, origin=None) -> SemanticElement:
+            prefetched, intent, origin=None, version=0,
+            fetched_at=None, freq_at_fetch=None) -> SemanticElement:
         if self.active[row]:
             # a silent clobber would leave the displaced SE's id2row entry
             # pointing at a row that now describes a different element
@@ -75,6 +92,11 @@ class SEStore:
         self.cost[row] = cost
         self.latency[row] = latency
         self.staticity[row] = staticity
+        self.version[row] = version
+        self.fetched_at[row] = created_at if fetched_at is None else fetched_at
+        self.freq_at_fetch[row] = freq if freq_at_fetch is None \
+            else freq_at_fetch
+        self.revalidating[row] = False
         self.prefetched[row] = prefetched
         self.active[row] = True
         self.key[row] = key
@@ -82,6 +104,8 @@ class SEStore:
         self.intent[row] = intent
         self.origin[row] = origin
         self.id2row[se_id] = row
+        if intent is not None:
+            self.by_intent.setdefault(intent, set()).add(se_id)
         return SemanticElement(self, row)
 
     def snapshot_row(self, row: int) -> dict:
@@ -98,7 +122,9 @@ class SEStore:
             expires_at=float(s.expires_at[row]),
             freq=int(s.freq[row]), last_access=float(s.last_access[row]),
             prefetched=bool(s.prefetched[row]), intent=s.intent[row],
-            origin=s.origin[row],
+            origin=s.origin[row], version=int(s.version[row]),
+            fetched_at=float(s.fetched_at[row]),
+            freq_at_fetch=int(s.freq_at_fetch[row]),
         )
 
     def add_meta(self, row: int, meta: dict) -> SemanticElement:
@@ -109,7 +135,15 @@ class SEStore:
     def remove_row(self, row: int) -> int:
         """Deactivate one row; returns the freed byte count."""
         size = int(self.size[row])
-        del self.id2row[int(self.se_id[row])]
+        se_id = int(self.se_id[row])
+        del self.id2row[se_id]
+        intent = self.intent[row]
+        if intent is not None:
+            ids = self.by_intent.get(intent)
+            if ids is not None:
+                ids.discard(se_id)
+                if not ids:
+                    del self.by_intent[intent]
         self.active[row] = False
         self.se_id[row] = -1
         self.key[row] = None

@@ -55,6 +55,13 @@ class SemanticElement:
     latency = _field("latency", float)
     created_at = _field("created_at", float)
     expires_at = _field("expires_at", float)
+    # freshness (core/freshness.py): origin knowledge version this value
+    # was fetched at + when; a refresh bumps both in place. revalidating
+    # = known stale, refetch in flight, not servable meanwhile
+    version = _field("version", int)
+    fetched_at = _field("fetched_at", float)
+    freq_at_fetch = _field("freq_at_fetch", int)
+    revalidating = _field("revalidating", bool)
     last_access = _field("last_access", float)
     prefetched = _field("prefetched", bool)
 

@@ -235,7 +235,8 @@ for _name, _cast in (("freq", int), ("staticity", int), ("cost", float),
                      ("latency", float), ("created_at", float),
                      ("expires_at", float), ("last_access", float),
                      ("prefetched", bool), ("intent", lambda v: v),
-                     ("origin", lambda v: v)):
+                     ("origin", lambda v: v), ("version", int),
+                     ("fetched_at", float)):
     setattr(WarmElement, _name, _warm_field(_name, _cast))
 
 
@@ -404,11 +405,18 @@ class TieredCache(CortexCache):
             return
         metas = [
             (self.soa.snapshot_row(int(r)),
-             np.array(self.seri.index.emb[int(r)], copy=True))
+             np.array(self.seri.index.emb[int(r)], copy=True),
+             bool(self.soa.revalidating[int(r)]))
             for r in rows
         ]
         self._drop_rows(np.asarray(rows))
-        for meta, emb in metas:
+        for meta, emb, revalidating in metas:
+            if revalidating:
+                # KNOWN-stale victim (refetch in flight): demoting would
+                # park the stale value in WARM where the refresh cannot
+                # find it — it just leaves the system
+                self.stats.invalidations += 1
+                continue
             if meta["expires_at"] <= now:
                 self.stats.ttl_evictions += 1
                 continue
@@ -445,7 +453,12 @@ class TieredCache(CortexCache):
         self.usage += meta["size"]
         self.stats.bytes_stored = self.usage
         self.tier_stats.promotions += 1
-        return self.store[meta["se_id"]]
+        se = self.store[meta["se_id"]]
+        if self.on_promote is not None:
+            # refresh-ahead timers die during a warm sojourn — tell the
+            # freshness layer this entry is hot (and renewable) again
+            self.on_promote(se)
+        return se
 
     # --------------------------------------------------- eviction hooks
 
@@ -508,7 +521,8 @@ class TieredCache(CortexCache):
             # rows, so a stage-1 view's row may now hold a DIFFERENT SE
             # (returning `se` here served the wrong entry's value once a
             # promote→demote cycle reused its row mid-batch)
-            return self.store[se.se_id]
+            live = self.store[se.se_id]
+            return None if live.revalidating else live
         if se.se_id in self.warm.soa.id2row:
             # a HOT candidate demoted mid-batch (an earlier promotion's
             # make_room): the entry is alive in WARM — pull it back
@@ -534,6 +548,32 @@ class TieredCache(CortexCache):
                 self.tier_stats.warm_hits += 1
                 se = pse
         super().account_hit(se, now)
+
+    # --------------------------------------------------------- freshness
+
+    def ses_for_intent(self, intent) -> list:
+        """Hot views first (se_id order), then warm — a change-feed
+        notice must reach BOTH tiers: a stale warm entry would otherwise
+        promote with its stale value on the next judge-validated hit."""
+        out = super().ses_for_intent(intent)
+        wids = self.warm.soa.by_intent.get(intent)
+        if wids:
+            out.extend(self.warm.view(i) for i in sorted(wids))
+        return out
+
+    def has_intent(self, intent) -> bool:
+        return super().has_intent(intent) or \
+            intent in self.warm.soa.by_intent
+
+    def invalidate_se(self, se_id: int, now: float) -> bool:
+        if se_id in self.soa.id2row:
+            return super().invalidate_se(se_id, now)
+        row = self.warm.soa.id2row.get(se_id)
+        if row is None:
+            return False
+        self.warm.remove_row(row)
+        self.stats.invalidations += 1
+        return True
 
     def peek_semantic(self, query: str, q_emb: np.ndarray, now: float):
         """Both tiers, hot first — federation peers can lease warm

@@ -244,6 +244,41 @@ def longtail_workload(
     return out
 
 
+def churn_workload(
+    world: SemanticWorld,
+    n_requests: int,
+    *,
+    zipf_s: float = 0.9,
+    n_paraphrases: int = 40,
+    rate: float = 4.0,
+    seed: int = 0,
+) -> list[Request]:
+    """Freshness workload (DESIGN.md §11): steady Zipf revisits meant to
+    run against a :class:`~repro.data.world.MutableWorld`.
+
+    Single-round requests on a fixed moderate-skew popularity law, so
+    the same intents are revisited throughout the run and the run
+    duration (``n_requests / rate``) spans several update periods of the
+    low-staticity intents — every revisit-after-update is a chance to
+    serve stale knowledge, which is exactly what the freshness policies
+    (TTL-only vs invalidation vs invalidation+refresh-ahead) differ on.
+    Paraphrases rotate per visit so exact-match caches can't shortcut.
+    The generator itself is world-agnostic: on a static world it is just
+    a single-round Zipf stream (and ``stale_hits`` must stay 0).
+    """
+    rng = np.random.default_rng(seed)
+    probs = _zipf_probs(world.n_intents, zipf_s)
+    perm = rng.permutation(world.n_intents)
+    out = []
+    t = 0.0
+    for i in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        intent = int(perm[rng.choice(world.n_intents, p=probs)])
+        q = world.query(intent, int(rng.integers(0, n_paraphrases)))
+        out.append(Request(i, t, q, session=i, n_rounds=1))
+    return out
+
+
 def region_workloads(
     world: SemanticWorld,
     n_per_region: int,

@@ -131,9 +131,110 @@ class SemanticWorld:
     def latency_mult(self, query: str) -> float:
         return float(self._lat_mult[self.intent_of(query)])
 
-    # the "live tool": ground truth fetch (used by recalibration too)
-    def fetch(self, query: str) -> str:
+    # ------------------------------------------------- freshness surface
+    # The static world exposes the same time-aware API as MutableWorld so
+    # the engine/cache/federation never branch on the world flavor: here
+    # every intent is eternally at version 0 and never updates.
+
+    def intent_version(self, iid: int, t: float) -> int:
+        """Knowledge version of intent ``iid`` as of virtual time ``t``."""
+        return 0
+
+    def version_at(self, query: str, t: float) -> int:
+        return self.intent_version(self.intent_of(query), t)
+
+    def answer_at(self, query: str, t: float) -> str:
+        """Ground-truth answer as of virtual time ``t``."""
         return self.answer(query)
+
+    def next_update(self, iid: int, t: float) -> float:
+        """Virtual time of the first update strictly after ``t`` (inf =
+        this intent never changes). The origin change-feed schedules its
+        notification events from this."""
+        return float("inf")
+
+    # the "live tool": ground truth fetch (used by recalibration too).
+    # ``t`` is the virtual instant the origin serves the request; the
+    # static world ignores it.
+    def fetch(self, query: str, t: float | None = None) -> str:
+        return self.answer_at(query, 0.0 if t is None else t)
 
     def equivalent(self, cached_value, ground_value) -> bool:
         return cached_value == ground_value
+
+
+class MutableWorld(SemanticWorld):
+    """Semantic world whose knowledge CHANGES over virtual time.
+
+    Each intent's answer updates on a deterministic schedule driven
+    *inversely* by its staticity class: class-1 (ephemeral) intents update
+    every ``churn_min_period`` seconds, class-10 (stable) every
+    ``churn_max_period`` — the same exponential shape as
+    ``ttl_from_staticity``, so the staticity metadata the judge estimates
+    is *empirically meaningful*: a TTL derived from it either does or does
+    not outrun the intent's real update cadence.
+
+    Updates are versioned, never random at query time: intent ``i``
+    updates at ``phase_i + k · period_i`` (``phase_i`` a seeded per-intent
+    offset in ``[0, period_i)`` so updates de-synchronize), and
+    ``answer_at(q, t)`` returns ``answer-<i>`` before the first update,
+    ``answer-<i>-v<k>`` after the k-th. Cached values therefore go stale
+    exactly when the schedule says so, and ``info_accuracy`` measures
+    staleness, not judge noise alone. Embeddings and value sizes stay
+    fixed — the *knowledge value* churns, not the query semantics.
+
+    ``churn_frac`` < 1 leaves a seeded fraction of intents permanently
+    static (period = inf), modelling the mixed world the staticity score
+    exists for. ``churn_frac=0`` is behaviourally identical to the static
+    :class:`SemanticWorld`.
+    """
+
+    def __init__(
+        self,
+        n_intents: int = 1000,
+        dim: int = 128,
+        *,
+        churn_min_period: float = 60.0,
+        churn_max_period: float = 3600.0,
+        churn_frac: float = 1.0,
+        **kw,
+    ):
+        super().__init__(n_intents, dim, **kw)
+        self.churn_min_period = churn_min_period
+        self.churn_max_period = churn_max_period
+        stat = np.array([it.staticity for it in self.intents], np.float64)
+        frac = (np.clip(stat, 1, 10) - 1) / 9.0
+        period = churn_min_period * (
+            churn_max_period / churn_min_period
+        ) ** frac
+        # phase BEFORE the churn mask: one rng draw per intent either way,
+        # so the schedule of churning intents is invariant to churn_frac
+        phase = self.rng.random(n_intents) * period
+        churns = self.rng.random(n_intents) < churn_frac
+        # inf * random() would be nan for random()==0 — set both explicitly
+        self._period = np.where(churns, period, np.inf)
+        self._phase = np.where(churns, phase, np.inf)
+
+    def intent_version(self, iid: int, t: float) -> int:
+        ph = float(self._phase[iid])
+        if t < ph:
+            return 0
+        return int((t - ph) // float(self._period[iid])) + 1
+
+    def answer_at(self, query: str, t: float) -> str:
+        iid = self.intent_of(query)
+        v = self.intent_version(iid, t)
+        return f"answer-{iid}" if v == 0 else f"answer-{iid}-v{v}"
+
+    def next_update(self, iid: int, t: float) -> float:
+        ph = float(self._phase[iid])
+        if not np.isfinite(ph):
+            return float("inf")
+        per = float(self._period[iid])
+        u = ph + self.intent_version(iid, t) * per
+        # strict progress despite float rounding: at t == ph + k·per the
+        # floor in intent_version can land one step short, which would
+        # return u == t and spin the change feed at a frozen instant
+        while u <= t:
+            u += per
+        return u

@@ -10,11 +10,14 @@ import argparse
 import json
 
 from repro.core.cache import make_cache
+from repro.core.freshness import ChangeFeed, FreshnessConfig, FreshnessManager
 from repro.core.judge import OracleJudge
 from repro.core.tiers import make_tiered_cache
-from repro.data.workloads import (longtail_workload, swe_workload,
-                                  trend_workload, zipf_workload)
-from repro.data.world import SemanticWorld
+from repro.data.workloads import (churn_workload, longtail_workload,
+                                  swe_workload, trend_workload,
+                                  zipf_workload)
+from repro.data.world import MutableWorld, SemanticWorld
+from repro.serving.clock import VirtualClock
 from repro.serving.engine import Engine, EngineConfig, ExactCache
 from repro.serving.gpu import GPU, GPUConfig
 from repro.serving.remote import RemoteDataService
@@ -30,6 +33,8 @@ def build_workload(world, name: str, n: int, seed: int, zipf_s: float = 0.99,
         return swe_workload(world, max(n // 5, 1), seed=seed)
     if name == "longtail":
         return longtail_workload(world, n, seed=seed, tail_len=tail_len)
+    if name == "churn":
+        return churn_workload(world, n, seed=seed, zipf_s=zipf_s)
     raise ValueError(name)
 
 
@@ -57,9 +62,27 @@ def run_once(
     warm_value_ratio: float = 0.4,
     warm_access_latency: float = 0.01,
     tail_len: int | None = None,
+    churn_period: float | None = None,
+    churn_max_period: float | None = None,
+    churn_frac: float = 1.0,
+    invalidation: bool = False,
+    refresh_ahead: bool = False,
+    feed_delay: float = 0.15,
+    refresh_min_freq: int = 1,
     seed: int = 0,
 ) -> dict:
-    world = SemanticWorld(n_intents=n_intents, dim=dim, seed=seed)
+    # churn_period switches the ground truth to a MutableWorld whose
+    # low-staticity intents update every churn_period seconds (DESIGN.md
+    # §11); None keeps the immutable world, and stale_hits stays 0.
+    if churn_period is not None:
+        world = MutableWorld(
+            n_intents=n_intents, dim=dim, seed=seed,
+            churn_min_period=churn_period,
+            churn_max_period=churn_max_period or churn_period * 8.0,
+            churn_frac=churn_frac,
+        )
+    else:
+        world = SemanticWorld(n_intents=n_intents, dim=dim, seed=seed)
     reqs = build_workload(world, workload, n_requests, seed + 1,
                           zipf_s=zipf_s, tail_len=tail_len)
     cap = int(cache_ratio * world._sizes.sum())
@@ -84,13 +107,26 @@ def run_once(
             )
     elif mode == "exact":
         exact = ExactCache(cap, max_ttl=max_ttl)
+    clock = VirtualClock()
+    remote = RemoteDataService(qpm=qpm, seed=seed + 3)
+    freshness = None
+    if cache is not None and (invalidation or refresh_ahead):
+        feed = ChangeFeed(world, clock) if invalidation else None
+        freshness = FreshnessManager(
+            cache=cache, remote=remote, world=world, clock=clock,
+            cfg=FreshnessConfig(
+                invalidation=invalidation, refresh_ahead=refresh_ahead,
+                feed_delay=feed_delay, refresh_min_freq=refresh_min_freq,
+            ),
+            feed=feed,
+        )
     eng = Engine(
         world=world,
         requests=reqs,
         mode=mode,
         cache=cache,
         exact=exact,
-        remote=RemoteDataService(qpm=qpm, seed=seed + 3),
+        remote=remote,
         gpu=GPU(GPUConfig(colocated=colocated)),
         cfg=EngineConfig(
             closed_loop=concurrency,
@@ -102,6 +138,8 @@ def run_once(
             t_cache_warm=warm_access_latency,
             seed=seed + 4,
         ),
+        clock=clock,
+        freshness=freshness,
     )
     return eng.run()
 
@@ -109,7 +147,14 @@ def run_once(
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="zipf",
-                    choices=["zipf", "trend", "swe", "longtail"])
+                    choices=["zipf", "trend", "swe", "longtail", "churn"])
+    ap.add_argument("--churn-period", type=float, default=None,
+                    help="mutable world: class-1 intents update every this"
+                         " many seconds (DESIGN.md §11)")
+    ap.add_argument("--invalidation", action="store_true",
+                    help="subscribe the cache to the origin change feed")
+    ap.add_argument("--refresh-ahead", action="store_true",
+                    help="revalidate hot entries instead of dropping them")
     ap.add_argument("--warm-frac", type=float, default=None,
                     help="split this fraction of the byte budget into an "
                          "int8/zlib warm tier (DESIGN.md §10)")
@@ -140,6 +185,9 @@ def main(argv=None):
         recalibrate_every=args.recalibrate_every,
         prefetch=not args.no_prefetch,
         warm_frac=args.warm_frac,
+        churn_period=args.churn_period,
+        invalidation=args.invalidation,
+        refresh_ahead=args.refresh_ahead,
         seed=args.seed,
     )
     print(json.dumps(s, indent=2, default=float))

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.cache import CortexCache
 from repro.core.prefetch import MarkovPrefetcher
+from repro.core.semantic_element import ttl_from_staticity
 from repro.core.recalibrate import EvalRecord, recalibrate
 from repro.data.workloads import Request
 from repro.data.world import SemanticWorld
@@ -94,11 +95,18 @@ class _ReqState:
 
 
 class ExactCache:
-    """Exact-key baseline (Agent_exact): byte-identical query match, LRU."""
+    """Exact-key baseline (Agent_exact): byte-identical query match, LRU.
 
-    def __init__(self, capacity_bytes: int, max_ttl: float = 3600.0):
+    Freshness parity with the semantic cache: inserts that carry a
+    staticity class age through the same ``ttl_from_staticity`` curve, so
+    the exact and semantic baselines expire comparably instead of the
+    exact cache serving every entry for the full ``max_ttl``."""
+
+    def __init__(self, capacity_bytes: int, max_ttl: float = 3600.0,
+                 min_ttl: float = 30.0):
         self.capacity = capacity_bytes
         self.max_ttl = max_ttl
+        self.min_ttl = min_ttl
         self.d: dict[str, tuple[Any, float, int]] = {}  # val, expires, size
         self.order: list[str] = []
         self.usage = 0
@@ -122,7 +130,8 @@ class ExactCache:
         self.order.append(query)
         return ent[0]
 
-    def insert(self, query: str, value, size: int, now: float):
+    def insert(self, query: str, value, size: int, now: float,
+               staticity: int | None = None):
         if query in self.d:
             # refresh value + TTL in place (a stale entry would otherwise
             # never be replaced and the key would permanently miss)
@@ -131,7 +140,10 @@ class ExactCache:
         while self.usage + size > self.capacity and self.order:
             victim = self.order.pop(0)
             self.usage -= self.d.pop(victim)[2]
-        self.d[query] = (value, now + self.max_ttl, size)
+        ttl = self.max_ttl if staticity is None else ttl_from_staticity(
+            staticity, self.max_ttl, self.min_ttl
+        )
+        self.d[query] = (value, now + ttl, size)
         self.order.append(query)
         self.usage += size
 
@@ -155,6 +167,7 @@ class Engine:
         clock: Optional[VirtualClock] = None,
         router=None,
         region_id: int = 0,
+        freshness=None,
     ):
         self.world = world
         self.requests = requests
@@ -170,6 +183,12 @@ class Engine:
         # origin service (serving/federation.py).
         self.router = router
         self.region_id = region_id
+        # Freshness seam (core/freshness.py): when set, admissions arm
+        # change-feed watches + refresh-ahead timers, and cache hits are
+        # checked against the world's CURRENT knowledge version.
+        self.freshness = freshness
+        self.stale_hits = 0
+        self.stale_ages: list[float] = []
         self.rng = np.random.default_rng(self.cfg.seed)
         self.prefetcher = MarkovPrefetcher(
             confidence=self.cfg.prefetch_confidence
@@ -326,6 +345,7 @@ class Engine:
             # promotes it, which retires the warm row behind the view.
             se = cands[0]
             key, value = se.key, se.value
+            self._note_stale(se, now)
             self.cache.account_hit(se, now)
             st.rec.cache_hits += 1
             self._after_validated(st, key)
@@ -344,7 +364,8 @@ class Engine:
             for c in cands:
                 if not c.valid and c.se_id in self.cache.store:
                     c = self.cache.store[c.se_id]  # promoted meanwhile
-                if c.valid and not c.expired(now):
+                if c.valid and not c.expired(now) and \
+                        not getattr(c, "revalidating", False):
                     live.append(c)
             self._stage1_resolve(st, q, t0, live, now)
         self._dispatch_judges()
@@ -420,11 +441,30 @@ class Engine:
                 self.eval_log.append(EvalRecord(e["q"], key, val, float(s)))
             res = self.cache.finalize(e["q"], e["cands"], sc, now)
             if res.hit:
+                self._note_stale(res.se, now)
                 st.rec.cache_hits += 1
                 self._after_validated(st, res.se.key)
                 self._observe(st, res.se.value, from_cache=True)
             else:
                 self._go_remote(st)
+
+    def _note_stale(self, se, now: float) -> None:
+        """Freshness accounting for a cache-served value: compare the
+        SE's fetch-time knowledge version against the world's CURRENT
+        version of its intent. Exactly 0 stale hits on a static world
+        (every version is 0), so the static suites double as a
+        regression guard on this path."""
+        if se is None:
+            return
+        intent = se.intent
+        cur = (
+            self.world.intent_version(int(intent), now)
+            if intent is not None
+            else self.world.version_at(se.key, now)
+        )
+        if se.version < cur:
+            self.stale_hits += 1
+            self.stale_ages.append(now - se.fetched_at)
 
     def _go_remote(self, st: _ReqState):
         q = st.req.query_for_round(st.round)
@@ -450,32 +490,53 @@ class Engine:
                     ttl: Optional[float] = None,
                     staticity: Optional[int] = None,
                     origin: Optional[int] = None,
-                    size: Optional[int] = None):
+                    size: Optional[int] = None,
+                    version: Optional[int] = None,
+                    fetched_at: Optional[float] = None,
+                    src_intent: Optional[int] = None):
         """Complete one remote resolution (origin fetch or federated peer
         transfer): admit into the local cache and resume the request.
 
         ``value=None`` means "fetched from the origin" (ground truth from
-        the world); a peer transfer passes the sibling's cached value,
-        which — like any cache hit — may be stale or semantically wrong,
-        and flows into accuracy accounting the same way."""
+        the world AS OF ``now``, stamped with the origin's current
+        knowledge version); a peer transfer passes the sibling's cached
+        value with ITS version/fetch-time, which — like any cache hit —
+        may be stale or semantically wrong, and flows into accuracy and
+        staleness accounting the same way."""
         st.rec.remote_time += now - t0
-        if value is None:
-            value = self.world.fetch(q)
+        peer = value is not None
+        if not peer:
+            value = self.world.fetch(q, now)
+            version = self.world.version_at(q, now)
+            fetched_at = now
         else:
             st.rec.peer_transfers += 1
         if size is None:
             size = self.world.value_size(q)
         if self.mode in ("cortex", "cortex-nojudge") and self.cache is not None:
             q_emb = self.world.embed(q)
-            self.cache.insert(
+            # a cross-intent peer lease (ANN-only peek) must be tracked
+            # under the SOURCE entry's intent: the value's staleness and
+            # invalidation follow the intent the knowledge belongs to
+            se = self.cache.insert(
                 q, q_emb, value, now=now, cost=cost,
                 latency=now - t0, size=size,
-                intent=self.world.intent_of(q),
+                intent=(src_intent if src_intent is not None
+                        else self.world.intent_of(q)),
                 ttl=ttl, staticity=staticity, origin=origin,
+                version=0 if version is None else version,
+                fetched_at=fetched_at,
             )
+            if self.freshness is not None:
+                self.freshness.on_insert(se)
+            if peer:
+                # the transferred value is served to THIS request too —
+                # staleness exposure counts like a local cache hit
+                self._note_stale(se, now)
             self._after_validated(st, q)
         elif self.mode == "exact" and self.exact is not None:
-            self.exact.insert(q, value, size, now)
+            self.exact.insert(q, value, size, now,
+                              staticity=self.world.staticity(q))
         self._observe(st, value, from_cache=False)
 
     def _after_validated(self, st: _ReqState, key: str):
@@ -503,17 +564,23 @@ class Engine:
         t0 = self._now
 
         def prefetched(now):
-            self.cache.insert(
-                pq, pq_emb, self.world.fetch(pq), now=now, cost=out.cost,
+            se = self.cache.insert(
+                pq, pq_emb, self.world.fetch(pq, now), now=now,
+                cost=out.cost,
                 latency=now - t0, size=self.world.value_size(pq),
                 prefetched=True, intent=int(pred.state),
+                version=self.world.version_at(pq, now), fetched_at=now,
             )
+            if self.freshness is not None:
+                self.freshness.on_insert(se)
 
         self._push(out.finish, prefetched)
 
     def _observe(self, st: _ReqState, value, *, from_cache: bool):
         q_round = st.req.query_for_round(st.round)
-        correct = self.world.equivalent(value, self.world.answer(q_round))
+        correct = self.world.equivalent(
+            value, self.world.answer_at(q_round, self._now)
+        )
         st.info_values.append(correct)
         st.round += 1
         st.rec.rounds += 1
@@ -566,7 +633,7 @@ class Engine:
                 self.recal_cost += self.remote.cost_per_call
                 self.remote.calls += 1
                 self.remote.total_cost += self.remote.cost_per_call
-                return self.world.fetch(q)
+                return self.world.fetch(q, self._now)
 
             res = recalibrate(
                 self.eval_log[-512:], fetch_gt, self.world.equivalent,
@@ -677,11 +744,50 @@ class Engine:
             out.update(
                 hit_rate=s.hit_rate, evictions=s.evictions,
                 ttl_evictions=s.ttl_evictions,
+                invalidations=s.invalidations,
                 prefetch_inserts=s.prefetch_inserts,
                 prefetch_hits=s.prefetch_hits,
                 judge_calls=s.judge_calls,
                 cache_items=len(self.cache),
             )
+            # freshness accounting (DESIGN.md §11): every cache-served
+            # value is version-checked, so these are exact, not sampled.
+            # stale_hit_rate is per SERVED value (local hits + federated
+            # peer transfers — a transferred value reaches the requester
+            # just like a hit), the histogram buckets the age of the
+            # stale values at serve time (now - fetched_at, seconds).
+            # Denominator from THIS engine's records, not cache.stats —
+            # the federation "global" topology shares one cache across
+            # engines, and stale_hits is per engine.
+            served = sum(
+                r.cache_hits + r.peer_transfers for r in self.records
+            )
+            out["stale_hits"] = self.stale_hits
+            out["stale_hit_rate"] = (
+                self.stale_hits / served if served else 0.0
+            )
+            edges = (30.0, 60.0, 120.0, 300.0, 600.0, 1800.0)
+            hist = {}
+            lo = 0.0
+            for hi in edges:
+                hist[f"{lo:g}-{hi:g}"] = sum(
+                    1 for a in self.stale_ages if lo <= a < hi
+                )
+                lo = hi
+            hist[f"{lo:g}+"] = sum(1 for a in self.stale_ages if a >= lo)
+            out["stale_age_hist"] = hist
+            out["stale_age_mean"] = (
+                float(np.mean(self.stale_ages)) if self.stale_ages else 0.0
+            )
+            if self.freshness is not None:
+                fs = self.freshness.stats
+                out.update(
+                    refreshes=fs.refreshes,
+                    refresh_cost=fs.refresh_cost,
+                    refresh_skipped=fs.refresh_skipped,
+                    feed_notices=fs.notices,
+                    stale_found=fs.stale_found,
+                )
             ts = getattr(self.cache, "tier_stats", None)
             if ts is not None:  # tiered storage (DESIGN.md §10)
                 out.update(

@@ -71,6 +71,7 @@ class Region:
     remote: RemoteDataService
     gpu: GPU
     engine: Optional[Engine] = None
+    freshness: Optional[object] = None  # FreshnessManager (DESIGN.md §11)
 
 
 @dataclasses.dataclass
@@ -90,12 +91,21 @@ class FederationStats:
 @dataclasses.dataclass
 class _Lease:
     """Snapshot a positive peek response carries home (the source pins
-    the entry for the transfer, so eviction races are not modelled)."""
+    the entry for the transfer, so eviction races are not modelled).
+    ``version``/``fetched_at`` ride along so staleness accounting (and
+    the provenance-based invalidation rule, DESIGN.md §11) follows the
+    copy: a transferred value is exactly as fresh as its source."""
 
     value: Any
     expires_at: float
     staticity: int
     size: int
+    version: int = 0
+    fetched_at: float = 0.0
+    # the SOURCE entry's intent: an ANN-only peek can lease across
+    # intents (confusable pairs), and the copy's version/invalidation
+    # must track the intent the VALUE belongs to, not the local query's
+    intent: Optional[int] = None
 
 
 class Federation:
@@ -176,6 +186,9 @@ class Federation:
                     expires_at=float(se.expires_at),
                     staticity=int(se.staticity),
                     size=int(se.size),
+                    version=int(se.version),
+                    fetched_at=float(se.fetched_at),
+                    intent=se.intent,
                 )
         self.clock.push(
             t0 + rtt, self._response,
@@ -207,6 +220,9 @@ class Federation:
                         # across intents can have a different payload
                         # size than the local query's own value
                         size=lease.size,
+                        version=lease.version,
+                        fetched_at=lease.fetched_at,
+                        src_intent=lease.intent,
                     ),
                 )
                 return
@@ -262,6 +278,7 @@ class FederationRunner:
         engine_cfg: Optional[EngineConfig] = None,
         gpu_cfg: Optional[GPUConfig] = None,
         warm_frac: Optional[float] = None,
+        freshness=None,  # FreshnessConfig -> per-region managers (§11)
         seed: int = 0,
     ):
         if topology not in ("local", "peered", "global"):
@@ -293,8 +310,19 @@ class FederationRunner:
                 capacity_bytes=capacity, dim=world.dim, judge=judge,
             )
 
+        # one origin change feed shared by every region; each region
+        # subscribes with ITS one-way WAN delay (half the mean fetch
+        # RTT), so the eventual-consistency window is per-region —
+        # exactly the asymmetry the provenance rule exists for
+        self.feed = None
+        if freshness is not None:
+            from repro.core.freshness import ChangeFeed
+
+            self.feed = ChangeFeed(world, self.clock)
+
         self.regions: list[Region] = []
         shared_cache = None
+        shared_mgr = None
         if topology == "global":
             judge = OracleJudge(world, accuracy=judge_acc, seed=seed + 7)
             shared_cache = build_cache(
@@ -317,7 +345,27 @@ class FederationRunner:
                 seed=seed + 13 * (rid + 1),
             )
             gpu = GPU(gpu_cfg or GPUConfig())
-            self.regions.append(Region(rid, rc, cache, remote, gpu))
+            mgr = None
+            if freshness is not None:
+                if shared_cache is not None and shared_mgr is not None:
+                    mgr = shared_mgr  # one manager for the one cache
+                else:
+                    from repro.core.freshness import FreshnessManager
+
+                    mgr = FreshnessManager(
+                        cache=cache, remote=remote, world=world,
+                        clock=self.clock,
+                        cfg=dataclasses.replace(
+                            freshness,
+                            feed_delay=0.25 * (rc.wan_lat_lo + rc.wan_lat_hi),
+                        ),
+                        feed=self.feed,
+                    )
+                    if shared_cache is not None:
+                        shared_mgr = mgr
+            self.regions.append(
+                Region(rid, rc, cache, remote, gpu, freshness=mgr)
+            )
 
         self.federation = Federation(
             self.regions, self.clock, rtt=rtt,
@@ -344,6 +392,7 @@ class FederationRunner:
                 clock=self.clock,
                 router=(self.federation if topology == "peered" else None),
                 region_id=region.rid,
+                freshness=region.freshness,
             )
 
     @property
@@ -362,6 +411,13 @@ class FederationRunner:
     def _caches(self) -> list[CortexCache]:
         """Distinct cache objects (the global topology shares one)."""
         return list({id(r.cache): r.cache for r in self.regions}.values())
+
+    def _managers(self) -> list:
+        """Distinct freshness managers (global topology shares one)."""
+        return list({
+            id(r.freshness): r.freshness for r in self.regions
+            if r.freshness is not None
+        }.values())
 
     def summary(self) -> dict:
         per_region = {
@@ -404,6 +460,18 @@ class FederationRunner:
             "transfer_bytes": fs.transfer_bytes,
             "expired_leases": fs.expired_leases,
             "warm_leases": fs.warm_leases,
+            # freshness (DESIGN.md §11): fleet-wide staleness exposure
+            "stale_hits": int(sum(e.stale_hits for e in self.engines)),
+            "stale_rate": _ratio(
+                sum(e.stale_hits for e in self.engines),
+                sum(r.cache_hits + r.peer_transfers for r in recs),
+            ),
+            "invalidations": int(
+                sum(c.stats.invalidations for c in self._caches())
+            ),
+            "refreshes": int(sum(
+                m.stats.refreshes for m in self._managers()
+            )),
         }
         return {"aggregate": agg, "regions": per_region}
 

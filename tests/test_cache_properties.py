@@ -156,8 +156,23 @@ def test_shared_hit_accounting_counts_prefetch_hits():
 def test_ttl_from_staticity_monotone():
     ttls = [ttl_from_staticity(s, 3600.0) for s in range(1, 11)]
     assert all(a <= b for a, b in zip(ttls, ttls[1:]))
+    # STRICTLY monotone on the interior: every class buys real lifetime
+    assert all(a < b for a, b in zip(ttls, ttls[1:]))
     assert ttls[0] == 30.0
     assert abs(ttls[-1] - 3600.0) < 1e-6
+
+
+def test_ttl_from_staticity_clamps_at_class_bounds():
+    """Out-of-range staticity clamps to class 1 / class 10 — callers can
+    pass 0 (explicit ephemeral override) or a judge-mangled 11+ without
+    escaping the [min_ttl, max_ttl] envelope."""
+    for s in (-5, 0, 1):
+        assert ttl_from_staticity(s, 3600.0) == ttl_from_staticity(1, 3600.0)
+    for s in (10, 11, 99):
+        assert ttl_from_staticity(s, 3600.0) == ttl_from_staticity(10, 3600.0)
+    # custom min/max honored at the clamped ends
+    assert ttl_from_staticity(0, 900.0, 15.0) == 15.0
+    assert ttl_from_staticity(42, 900.0, 15.0) == pytest.approx(900.0)
 
 
 def test_eviction_policies_differ():

@@ -1,0 +1,473 @@
+"""Freshness subsystem tests (DESIGN.md §11): mutable world schedule,
+change feed, refresh-ahead, invalidation propagation, and the engine's
+staleness accounting."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.cache import make_cache
+from repro.core.freshness import ChangeFeed, FreshnessConfig, FreshnessManager
+from repro.core.judge import OracleJudge
+from repro.data.world import MutableWorld, SemanticWorld
+from repro.launch.serve import run_once
+from repro.serving.clock import VirtualClock
+from repro.serving.remote import RemoteDataService
+
+MW = MutableWorld(n_intents=80, dim=32, churn_min_period=10.0,
+                  churn_max_period=80.0, seed=3)
+
+
+# ------------------------------------------------------------- world
+
+
+def test_mutable_world_versions_monotone_and_deterministic():
+    w2 = MutableWorld(n_intents=80, dim=32, churn_min_period=10.0,
+                      churn_max_period=80.0, seed=3)
+    for iid in range(0, 80, 7):
+        prev = -1
+        for t in np.linspace(0.0, 300.0, 40):
+            v = MW.intent_version(iid, float(t))
+            assert v >= prev
+            assert v == w2.intent_version(iid, float(t))  # same seed
+            prev = v
+
+
+def test_mutable_world_answer_changes_exactly_at_updates():
+    iid = next(i for i in range(80)
+               if np.isfinite(MW._phase[i]) and MW._phase[i] < 100.0)
+    q = MW.query(iid, 0)
+    u1 = MW.next_update(iid, 0.0)
+    eps = 1e-6
+    assert MW.answer_at(q, u1 - eps) == f"answer-{iid}"
+    assert MW.answer_at(q, u1 + eps) == f"answer-{iid}-v1"
+    u2 = MW.next_update(iid, u1 + eps)
+    assert u2 > u1
+    assert MW.answer_at(q, u2 + eps) == f"answer-{iid}-v2"
+    # fetch is the time-aware ground truth the origin serves
+    assert MW.fetch(q, u1 + eps) == MW.answer_at(q, u1 + eps)
+
+
+def test_mutable_world_staticity_drives_period_inversely():
+    stats = np.array([it.staticity for it in MW.intents])
+    per = MW._period
+    finite = np.isfinite(per)
+    lo = per[finite & (stats == stats[finite].min())]
+    hi = per[finite & (stats == stats[finite].max())]
+    assert lo.max() < hi.min()  # ephemeral classes update faster
+    assert per[finite].min() >= 10.0 - 1e-9
+
+
+def test_mutable_world_next_update_strictly_advances():
+    """Regression: at an exact update instant the floor in
+    intent_version could round short and freeze the change feed at a
+    constant virtual time."""
+    for iid in range(80):
+        if not np.isfinite(MW._phase[iid]):
+            continue
+        t = 0.0
+        for _ in range(50):
+            nxt = MW.next_update(iid, t)
+            assert nxt > t
+            t = nxt
+
+
+def test_static_world_freshness_surface_is_inert():
+    w = SemanticWorld(n_intents=10, dim=16, seed=0)
+    q = w.query(3, 0)
+    assert w.version_at(q, 1e9) == 0
+    assert w.next_update(3, 0.0) == float("inf")
+    assert w.answer_at(q, 1e9) == w.answer(q)
+
+
+def test_churn_frac_zero_is_static():
+    w = MutableWorld(n_intents=40, dim=16, churn_min_period=5.0,
+                     churn_frac=0.0, seed=1)
+    for i in range(40):
+        assert w.intent_version(i, 1e6) == 0
+        assert w.next_update(i, 0.0) == float("inf")
+
+
+# --------------------------------------------------------- change feed
+
+
+def test_change_feed_notice_carries_wan_delay():
+    clock = VirtualClock()
+    feed = ChangeFeed(MW, clock)
+    got = []
+    feed.subscribe(lambda i, v, t: got.append((clock.now, i, v, t)), 0.5)
+    iid = next(i for i in range(80)
+               if np.isfinite(MW._phase[i]) and MW._phase[i] < 50.0)
+    feed.watch(iid)
+    feed.watch(iid)  # idempotent
+    u1 = MW.next_update(iid, 0.0)
+    while clock.pending and clock.now < u1 + 1.0:
+        clock.step()
+    assert got, "no notice delivered"
+    t_recv, i, v, t_up = got[0]
+    assert i == iid and v == 1
+    assert t_up == pytest.approx(u1)
+    assert t_recv == pytest.approx(u1 + 0.5)  # one-way WAN delay
+
+
+def test_change_feed_ignores_static_intents():
+    clock = VirtualClock()
+    w = MutableWorld(n_intents=20, dim=16, churn_frac=0.0, seed=2)
+    feed = ChangeFeed(w, clock)
+    feed.subscribe(lambda *a: None, 0.1)
+    for i in range(20):
+        feed.watch(i)
+    assert clock.pending == 0  # nothing scheduled, nothing leaks
+
+
+# ------------------------------------------------- cache refresh APIs
+
+
+def fresh_cache(world, **kw):
+    judge = OracleJudge(world, accuracy=1.0, seed=1)
+    return make_cache(capacity_bytes=50_000, dim=world.dim, judge=judge,
+                      index_capacity=128, **kw)
+
+
+def test_live_view_survives_in_place_refresh():
+    """Rebind under churn: a refresh renews value/version/expiry IN the
+    row, so SemanticElement views taken before the refresh (e.g. held by
+    an in-flight judge micro-batch) stay valid and see the new value."""
+    cache = fresh_cache(MW)
+    q = MW.query(1, 0)
+    se = cache.insert(q, MW.embed(q), MW.fetch(q, 0.0), now=0.0,
+                      cost=0.01, latency=0.3, size=100, version=0)
+    view = cache.store[se.se_id]  # independent live view
+    old_expiry = view.expires_at
+    got = cache.refresh_entry(se.se_id, value="fresh-v3", version=3,
+                              now=50.0)
+    assert got is not None
+    assert view.valid
+    assert view.value == "fresh-v3"
+    assert view.version == 3
+    assert view.fetched_at == 50.0
+    assert view.expires_at > old_expiry
+    assert not view.revalidating
+    # row/se_id/freq untouched: LCFU standing survives the refresh
+    assert view.row == se.row and view.freq == se.freq
+
+
+def test_revalidating_entry_is_not_servable():
+    cache = fresh_cache(MW)
+    q = MW.query(2, 0)
+    se = cache.insert(q, MW.embed(q), MW.fetch(q, 0.0), now=0.0,
+                      cost=0.01, latency=0.3, size=100)
+    q2 = MW.query(2, 1)
+    assert cache.lookup(q2, MW.embed(q2), 1.0).hit
+    se.revalidating = True
+    res = cache.lookup(q2, MW.embed(q2), 2.0)
+    assert not res.hit  # known-stale: miss now, correct answer later
+    assert cache.peek_semantic(q2, MW.embed(q2), 2.0) is None
+    cache.refresh_entry(se.se_id, value="v1", version=1, now=3.0)
+    assert cache.lookup(q2, MW.embed(q2), 4.0).hit  # servable again
+
+
+def test_rebind_skips_candidate_invalidated_mid_batch():
+    """A stage-1 candidate dropped by a change-feed notice between
+    stage 1 and judge completion must finalize as a miss, not serve a
+    freed row."""
+    cache = fresh_cache(MW)
+    q = MW.query(4, 0)
+    se = cache.insert(q, MW.embed(q), MW.fetch(q, 0.0), now=0.0,
+                      cost=0.01, latency=0.3, size=100)
+    q2 = MW.query(4, 1)
+    cands = cache.stage1(q2, MW.embed(q2), 1.0)
+    assert cands and cands[0].se_id == se.se_id
+    assert cache.invalidate_se(se.se_id, 1.5)
+    scores = np.ones(len(cands), np.float32)
+    res = cache.finalize(q2, cands, scores, 2.0)
+    assert not res.hit
+    assert cache.stats.invalidations == 1
+
+
+def test_ses_for_intent_and_invalidate():
+    cache = fresh_cache(MW)
+    for i, para in ((7, 0), (7, 1), (9, 0)):
+        q = MW.query(i, para)
+        cache.insert(q, MW.embed(q), "v", now=0.0, cost=0.01, latency=0.3,
+                     size=50, intent=i)
+    ses = cache.ses_for_intent(7)
+    assert [se.intent for se in ses] == [7, 7]
+    for se in ses:
+        assert cache.invalidate_se(se.se_id, 1.0)
+    assert cache.ses_for_intent(7) == []
+    assert len(cache.ses_for_intent(9)) == 1
+    assert cache.stats.invalidations == 2
+    assert not cache.invalidate_se(12345, 1.0)  # unknown id: no-op
+
+
+# ------------------------------------------------- manager lifecycle
+
+
+def build_manager(world, cfg=None, qpm=None):
+    clock = VirtualClock()
+    cache = fresh_cache(world)
+    remote = RemoteDataService(qpm=qpm, seed=0)
+    feed = ChangeFeed(world, clock)
+    mgr = FreshnessManager(cache=cache, remote=remote, world=world,
+                           clock=clock, cfg=cfg, feed=feed)
+    return clock, cache, remote, feed, mgr
+
+
+def test_refresh_ahead_renews_before_expiry():
+    cfg = FreshnessConfig(refresh_margin=0.2, refresh_min_freq=1)
+    clock, cache, remote, feed, mgr = build_manager(MW, cfg)
+    q = MW.query(1, 0)
+    se = cache.insert(q, MW.embed(q), MW.fetch(q, 0.0), now=0.0,
+                      cost=0.01, latency=0.3, size=100,
+                      version=MW.version_at(q, 0.0))
+    mgr.on_insert(se)
+    # one validated hit since the fetch: the entry earns its renewal
+    q2 = MW.query(1, 1)
+    assert cache.lookup(q2, MW.embed(q2), 1.0).hit
+    expiry0 = se.expires_at
+    while clock.pending and clock.now < expiry0 + 1.0 and \
+            mgr.stats.refreshes == 0:
+        clock.step()
+    assert mgr.stats.refreshes == 1
+    assert se.valid  # never purged: renewed in place
+    assert se.expires_at > expiry0
+    assert se.version == MW.version_at(q, clock.now)
+    assert mgr.stats.refresh_cost > 0.0
+
+
+def test_refresh_chain_stops_when_hits_stop():
+    """Regression: worthiness is hits SINCE THE LAST renewal, not
+    lifetime freq — one early hit must not buy perpetual renewals."""
+    cfg = FreshnessConfig(invalidation=False, refresh_margin=0.2,
+                          refresh_min_freq=1)
+    clock, cache, remote, feed, mgr = build_manager(MW, cfg)
+    q = MW.query(1, 0)
+    se = cache.insert(q, MW.embed(q), MW.fetch(q, 0.0), now=0.0,
+                      cost=0.01, latency=0.3, size=100)
+    mgr.on_insert(se)
+    q2 = MW.query(1, 1)
+    assert cache.lookup(q2, MW.embed(q2), 1.0).hit   # earns renewal #1
+    # no invalidation feed: the only events are the refresh timers —
+    # renewal #1 fires, re-arms, then the cold tick declines and the
+    # chain dies (the event heap drains instead of ticking forever)
+    while clock.pending:
+        clock.step()
+    assert mgr.stats.refreshes == 1      # renewed once, then went cold
+    assert se.valid
+    assert se.expired(se.expires_at + 1e-6)  # left to age out normally
+
+
+def test_cold_entries_expire_instead_of_refreshing():
+    cfg = FreshnessConfig(refresh_margin=0.2, refresh_min_freq=5)
+    clock, cache, remote, feed, mgr = build_manager(MW, cfg)
+    q = MW.query(1, 0)
+    se = cache.insert(q, MW.embed(q), MW.fetch(q, 0.0), now=0.0,
+                      cost=0.01, latency=0.3, size=100)
+    mgr.on_insert(se)  # freq=1 < 5: not earning its keep
+    expiry0 = se.expires_at
+    while clock.pending and clock.now <= expiry0:
+        clock.step()
+    assert mgr.stats.refreshes == 0
+
+
+def test_notice_drops_federated_copy_refreshes_own(monkeypatch):
+    """Provenance rule: on a change notice the locally-fetched entry
+    revalidates in place; the federated copy (se.origin set) drops —
+    its source region is the one responsible for refreshing it."""
+    cfg = FreshnessConfig(refresh_margin=0.1, refresh_min_freq=0,
+                          feed_delay=0.05)
+    clock, cache, remote, feed, mgr = build_manager(MW, cfg)
+    iid = next(i for i in range(80)
+               if np.isfinite(MW._phase[i]) and 5.0 < MW._phase[i] < 60.0)
+    q_own = MW.query(iid, 0)
+    q_copy = MW.query(iid, 1)
+    own = cache.insert(q_own, MW.embed(q_own), MW.fetch(q_own, 0.0),
+                       now=0.0, cost=0.01, latency=0.3, size=100,
+                       intent=iid, version=0)
+    copy = cache.insert(q_copy, MW.embed(q_copy), MW.fetch(q_copy, 0.0),
+                        now=0.0, cost=0.001, latency=0.05, size=100,
+                        intent=iid, version=0, origin=2)
+    mgr.on_insert(own)
+    mgr.on_insert(copy)
+    own_id, copy_id = own.se_id, copy.se_id
+    u1 = MW.next_update(iid, 0.0)
+    while clock.pending and clock.now < u1 + 5.0:
+        clock.step()
+    assert mgr.stats.notices >= 1
+    assert copy_id not in cache.store          # dropped (provenance)
+    assert own_id in cache.store               # refreshed in place
+    assert cache.store[own_id].version >= 1
+    assert cache.stats.invalidations >= 1
+    assert mgr.stats.refreshes >= 1
+
+
+def test_feed_unwatches_intent_no_longer_cached():
+    """Once every entry for an intent is gone, the feed stops firing
+    for it (interest predicate) — feed work is bounded by live cached
+    knowledge. The next admission re-watches."""
+    cfg = FreshnessConfig(refresh_ahead=False, feed_delay=0.05)
+    clock, cache, remote, feed, mgr = build_manager(MW, cfg)
+    iid = next(i for i in range(80)
+               if np.isfinite(MW._phase[i]) and MW._phase[i] < 50.0)
+    q = MW.query(iid, 0)
+    se = cache.insert(q, MW.embed(q), MW.fetch(q, 0.0), now=0.0,
+                      cost=0.01, latency=0.3, size=100, intent=iid)
+    mgr.on_insert(se)
+    assert iid in feed._watched
+    # the first notice drops the (refresh_ahead=False) entry; the fire
+    # after that sees no interest and lapses the watch
+    period = float(MW._period[iid])
+    u1 = MW.next_update(iid, 0.0)
+    while clock.pending and clock.now < u1 + 2 * period + 1.0:
+        clock.step()
+    assert se.se_id not in cache.store
+    assert iid not in feed._watched
+    # re-admission re-arms the watch
+    se2 = cache.insert(MW.query(iid, 1), MW.embed(MW.query(iid, 1)),
+                       "v", now=clock.now, cost=0.01, latency=0.3,
+                       size=100, intent=iid)
+    mgr.on_insert(se2)
+    assert iid in feed._watched
+
+
+def test_promotion_rearms_refresh_timer():
+    """An entry whose refresh timer died while it sat in the WARM tier
+    gets a new one when it promotes back to HOT."""
+    from repro.core.tiers import make_tiered_cache
+
+    clock = VirtualClock()
+    judge = OracleJudge(MW, accuracy=1.0, seed=1)
+    cache = make_tiered_cache(hot_bytes=50_000, warm_bytes=50_000,
+                              dim=MW.dim, judge=judge, index_capacity=128)
+    remote = RemoteDataService(qpm=None, seed=0)
+    mgr = FreshnessManager(
+        cache=cache, remote=remote, world=MW, clock=clock,
+        cfg=FreshnessConfig(invalidation=False, refresh_margin=0.2,
+                            refresh_min_freq=0),
+    )
+    assert cache.on_promote is not None   # manager claimed the hook
+    q = MW.query(1, 0)
+    se = cache.insert(q, MW.embed(q), MW.fetch(q, 0.0), now=0.0,
+                      cost=0.01, latency=0.3, size=100, intent=1)
+    se_id = se.se_id
+    cache._evict_n(1, 0.5)                # demote: timer target leaves HOT
+    assert se_id in cache.warm.soa.id2row
+    q2 = MW.query(1, 1)
+    res = cache.lookup(q2, MW.embed(q2), 1.0)   # warm hit -> promotion
+    assert res.hit and se_id in cache.store
+    # the promotion hook must have armed a timer that renews the entry
+    while clock.pending and mgr.stats.refreshes == 0:
+        clock.step()
+    assert mgr.stats.refreshes >= 1
+    assert se_id in cache.store
+
+
+def test_refresh_skipped_under_rate_limit_pressure():
+    cfg = FreshnessConfig(refresh_margin=0.2, refresh_min_freq=0,
+                          refresh_min_headroom=2.0)  # impossible bar
+    clock, cache, remote, feed, mgr = build_manager(MW, cfg, qpm=60.0)
+    q = MW.query(1, 0)
+    se = cache.insert(q, MW.embed(q), MW.fetch(q, 0.0), now=0.0,
+                      cost=0.01, latency=0.3, size=100)
+    mgr.on_insert(se)
+    expiry0 = se.expires_at
+    while clock.pending and clock.now <= expiry0:
+        clock.step()
+    assert mgr.stats.refreshes == 0
+    assert mgr.stats.refresh_skipped >= 1
+
+
+# -------------------------------------------------------- engine e2e
+
+
+E2E = dict(workload="churn", mode="cortex", n_requests=160, n_intents=120,
+           dim=32, concurrency=8, seed=11, churn_period=12.0,
+           churn_max_period=96.0, max_ttl=60.0, qpm=None, judge_acc=1.0,
+           prefetch=False)
+
+
+def test_engine_stale_hits_zero_without_churn():
+    s = run_once(**{**E2E, "churn_period": None, "churn_max_period": None})
+    assert s["stale_hits"] == 0
+    assert s["stale_age_hist"]["0-30"] == 0
+
+
+def test_engine_invalidation_cuts_stale_hits():
+    ttl_only = run_once(**E2E)
+    inval = run_once(invalidation=True, refresh_ahead=True, **E2E)
+    assert ttl_only["stale_hits"] > 0
+    assert inval["stale_hit_rate"] < ttl_only["stale_hit_rate"]
+    assert inval["info_accuracy"] > ttl_only["info_accuracy"]
+    assert inval["refreshes"] > 0
+    # the histogram is populated for the policy that serves stale
+    assert sum(ttl_only["stale_age_hist"].values()) == ttl_only["stale_hits"]
+
+
+def test_engine_same_seed_bit_identical_under_churn():
+    a = run_once(invalidation=True, refresh_ahead=True, **E2E)
+    b = run_once(invalidation=True, refresh_ahead=True, **E2E)
+    assert json.dumps(a, sort_keys=True, default=float) == \
+        json.dumps(b, sort_keys=True, default=float)
+
+
+def test_federation_invalidation_propagates():
+    """Multi-region: a shared mutable world + per-region change-feed
+    subscriptions — federated copies drop on notice, staleness exposure
+    stays bounded, and the run is deterministic."""
+    from repro.data.workloads import region_workloads
+    from repro.serving.federation import FederationRunner
+
+    world = MutableWorld(n_intents=100, dim=32, churn_min_period=15.0,
+                         churn_max_period=120.0, seed=5)
+    streams = region_workloads(world, 40, 2, overlap=0.7, seed=6)
+
+    def run():
+        return FederationRunner(
+            world=world, region_requests=streams, topology="peered",
+            freshness=FreshnessConfig(refresh_min_freq=1), seed=7,
+        ).run()["aggregate"]
+
+    a = run()
+    assert a["peer_transfers"] > 0
+    assert a["invalidations"] + a["refreshes"] > 0
+    b = run()
+    assert json.dumps(a, sort_keys=True, default=float) == \
+        json.dumps(b, sort_keys=True, default=float)
+
+
+def test_federation_without_freshness_unchanged():
+    """No freshness config => no feed, no manager, stale accounting all
+    zeros (static world) — the pre-§11 federation behaviour."""
+    from repro.data.workloads import region_workloads
+    from repro.serving.federation import FederationRunner
+
+    world = SemanticWorld(n_intents=80, dim=32, seed=5)
+    streams = region_workloads(world, 25, 2, overlap=0.6, seed=6)
+    r = FederationRunner(world=world, region_requests=streams,
+                         topology="peered", seed=7)
+    a = r.run()["aggregate"]
+    assert a["stale_hits"] == 0
+    assert a["refreshes"] == 0 and a["invalidations"] == 0
+
+
+# ------------------------------------------------- exact-cache parity
+
+
+def test_exact_cache_ttl_from_staticity():
+    from repro.core.semantic_element import ttl_from_staticity
+    from repro.serving.engine import ExactCache
+
+    c = ExactCache(10_000, max_ttl=600.0, min_ttl=30.0)
+    c.insert("ephemeral", "v", 100, now=0.0, staticity=1)
+    c.insert("stable", "v", 100, now=0.0, staticity=10)
+    c.insert("legacy", "v", 100, now=0.0)  # no staticity: full max_ttl
+    assert c.d["ephemeral"][1] == pytest.approx(30.0)
+    assert c.d["stable"][1] == pytest.approx(600.0)
+    assert c.d["legacy"][1] == pytest.approx(600.0)
+    mid = c.d["ephemeral"][1]
+    assert mid == pytest.approx(
+        ttl_from_staticity(1, c.max_ttl, c.min_ttl)
+    )
+    assert c.lookup("ephemeral", now=31.0) is None   # aged out
+    assert c.lookup("stable", now=31.0) == "v"
