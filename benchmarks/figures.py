@@ -319,6 +319,203 @@ def tiered_sweep(smoke: bool = False):
     return results
 
 
+def stage1_scaling(smoke: bool = False):
+    """Sublinear stage-1 sweep (DESIGN.md §12): brute force vs the
+    clustered (IVF) index over N ∈ {1k…64k} rows of intent-structured
+    embeddings, then an end-to-end engine comparison at the largest N
+    under the scan-proportional stage-1 latency model
+    (``t_cache_cpu + t_cache_per_row · rows_scanned``).
+
+    Gates (CI runs ``--smoke``): IVF recall@k ≥ 0.95 vs brute force at
+    every N; ≥ 3× fewer rows scanned at the largest N; e2e p50
+    cache-hit latency at the largest N lower with IVF than brute; and
+    nprobe=all bit-identical to the brute path — per-search (ids AND
+    sims) and across a full same-seed engine run.
+    """
+    import json as _json
+
+    from repro.core.cache import make_cache
+    from repro.core.clustering import ClusterConfig, ClusterRouter
+    from repro.core.judge import OracleJudge
+    from repro.core.seri import VectorIndex
+    from repro.data.workloads import zipf_workload
+    from repro.data.world import SemanticWorld
+    from repro.serving.engine import Engine, EngineConfig
+    from repro.serving.gpu import GPU, GPUConfig
+    from repro.serving.remote import RemoteDataService
+
+    import time as _time
+
+    dim, k, b = 64, 4, 8
+    paras = 8                       # stored paraphrases per intent
+    ns = (1024, 4096) if smoke else (1024, 4096, 16384, 65536)
+
+    # ---- index microbench: recall, rows scanned, host latency --------
+    ratios = {}
+    for n in ns:
+        world = SemanticWorld(n_intents=n // paras, dim=dim, seed=61)
+        embs = np.stack([
+            world.embed(world.query(i // paras, i % paras))
+            for i in range(n)
+        ])
+        ccfg = ClusterConfig(
+            n_clusters=max(8, min(512, int(2 * np.sqrt(n)))),
+            nprobe=max(4, int(np.sqrt(n)) // 16),
+            refresh_every=max(2048, n // 2), seed=62,
+        )
+        brute = VectorIndex(n, dim)
+        ivf = VectorIndex(n, dim,
+                          router=ClusterRouter(n, dim, ccfg))
+        for i in range(n):
+            brute.add(i, embs[i])
+            ivf.add(i, embs[i])
+        ivf.router.refresh(ivf)     # settle centroids post-build
+        rng = np.random.default_rng(63)
+        nq = 64 if smoke else 256
+        qs = np.stack([
+            world.embed(world.query(int(i), 99))
+            for i in rng.integers(0, n // paras, nq)
+        ])
+        recalls, rows_brute, rows_ivf = [], 0, 0
+        for off in range(0, nq, b):
+            blk = qs[off:off + b]
+            rb = brute.search_batch(blk, k, 0.0)
+            rows_brute += brute.last_scanned
+            ri = ivf.search_batch(blk, k, 0.0)
+            rows_ivf += ivf.last_scanned
+            recalls.extend(
+                len(set(ids_b) & set(ids_i)) / len(ids_b)
+                for (ids_b, _), (ids_i, _) in zip(rb, ri) if ids_b
+            )
+        recall = float(np.mean(recalls))
+
+        def _best_of(fn, reps=5):
+            # min-of-N: this host's wall clock jitters under time-sharing
+            fn()  # warm
+            best = float("inf")
+            for _ in range(reps):
+                t0 = _time.perf_counter()
+                fn()
+                best = min(best, _time.perf_counter() - t0)
+            return best
+
+        blk = qs[:b]
+        t_brute = _best_of(lambda: brute.search_batch(blk, k, 0.0))
+        t_ivf = _best_of(lambda: ivf.search_batch(blk, k, 0.0))
+        ratio = rows_brute / max(rows_ivf, 1)
+        ratios[n] = ratio
+        emit(f"stage1_scaling/N{n}", t_ivf * 1e6, seed=62,
+             recall_at_4=round(recall, 4),
+             rows_brute=rows_brute, rows_ivf=rows_ivf,
+             scan_ratio=round(ratio, 2),
+             brute_us=round(t_brute * 1e6, 1),
+             ivf_us=round(t_ivf * 1e6, 1),
+             nclusters=ccfg.n_clusters, nprobe=ccfg.nprobe)
+        if recall < 0.95:
+            raise SystemExit(
+                f"stage1 regression: IVF recall@{k} ({recall:.3f}) below "
+                f"the 0.95 floor at N={n}"
+            )
+        # nprobe=all must reproduce brute force bit-for-bit (same B)
+        ivf.router.cfg.nprobe = None
+        for off in range(0, nq, b):
+            blk = qs[off:off + b]
+            for (ids_b, sims_b), (ids_a, sims_a) in zip(
+                brute.search_batch(blk, k, 0.0),
+                ivf.search_batch(blk, k, 0.0),
+            ):
+                if ids_b != ids_a or not np.array_equal(sims_b, sims_a):
+                    raise SystemExit(
+                        "stage1 regression: nprobe=all diverged from "
+                        f"brute force at N={n}"
+                    )
+    top = ns[-1]
+    if ratios[top] < 3.0:
+        raise SystemExit(
+            f"stage1 regression: rows-scanned reduction at N={top} "
+            f"({ratios[top]:.2f}×) below the 3× floor"
+        )
+
+    # ---- end-to-end at the largest N: scan-proportional latency ------
+    n_fill = 4096 if smoke else 65536
+    n_req = 150 if smoke else 300
+    # scaled so a full brute pass costs ≈ +33 ms at either fill size —
+    # the smoke gate then exercises the same latency-model contrast as
+    # the full run instead of drowning in ms-level scheduling jitter
+    per_row = 5e-7 * (65536 / n_fill)
+    e2e_cfg = ClusterConfig(
+        n_clusters=64 if smoke else 256, nprobe=8 if smoke else 16,
+        min_train=512, refresh_every=n_fill, seed=64,
+    )
+
+    def e2e(cluster_cfg, t_per_row):
+        """One engine run over a cache prepopulated with ``n_fill``
+        filler entries (far from every query in embedding space, huge
+        TTL/capacity — pure stage-1 scan load, no behavior change)."""
+        world = SemanticWorld(n_intents=300, dim=dim, seed=65)
+        reqs = zipf_workload(world, n_req, seed=66)
+        judge = OracleJudge(world, accuracy=0.98, seed=67)
+        cache = make_cache(
+            capacity_bytes=1 << 40, dim=dim, judge=judge,
+            index_capacity=n_fill + 4096, cluster=cluster_cfg,
+        )
+        frng = np.random.default_rng(68)
+        fills = frng.standard_normal((n_fill, dim)).astype(np.float32)
+        fills /= np.linalg.norm(fills, axis=1, keepdims=True)
+        for i in range(n_fill):
+            cache.insert(f"fill:{i}:0", fills[i], value=i, now=0.0,
+                         cost=0.001, latency=0.1, size=64, staticity=10,
+                         ttl=1e8)
+        eng = Engine(
+            world=world, requests=reqs, mode="cortex", cache=cache,
+            remote=RemoteDataService(qpm=None, seed=69),
+            gpu=GPU(GPUConfig()),
+            # open loop: the scan delay lands on request latency instead
+            # of being absorbed by closed-loop self-pacing
+            cfg=EngineConfig(prefetch=False,
+                             t_cache_per_row=t_per_row, seed=70),
+        )
+        s = eng.run()
+        hits = [r.latency for r in eng.records if r.remote_calls == 0]
+        p50 = float(np.percentile(hits, 50)) if hits else float("nan")
+        return s, p50
+
+    sb, p50_brute = e2e(None, per_row)
+    si, p50_ivf = e2e(e2e_cfg, per_row)
+    for name, s, p50 in (("brute", sb, p50_brute), ("ivf", si, p50_ivf)):
+        emit(f"stage1_scaling/e2e_{name}@N{n_fill}",
+             s["latency_mean"] * 1e6, seed=65,
+             hitpath_p50_ms=round(p50 * 1e3, 2),
+             lat_ms=round(s["latency_mean"] * 1e3, 1),
+             hit=round(s["hit_rate"], 3),
+             rows_per_lookup=round(s["rows_per_lookup"], 1),
+             cache_s=round(s["cache_time_mean"], 4))
+    if not p50_ivf < p50_brute:
+        raise SystemExit(
+            "stage1 regression: e2e p50 cache-hit latency with IVF "
+            f"({p50_ivf:.4f}s) is not below brute force "
+            f"({p50_brute:.4f}s) at N={n_fill}"
+        )
+    # nprobe=all engine run must be bit-identical to brute (the scan
+    # instrumentation fields are the one legitimate difference)
+    import dataclasses as _dc
+
+    s0, _ = e2e(None, 0.0)
+    s1, _ = e2e(_dc.replace(e2e_cfg, nprobe=None), 0.0)
+
+    def strip(s):
+        return {k: v for k, v in s.items()
+                if k not in ("rows_scanned", "rows_per_lookup")}
+
+    if _json.dumps(strip(s0), sort_keys=True, default=float) != \
+            _json.dumps(strip(s1), sort_keys=True, default=float):
+        raise SystemExit(
+            "stage1 regression: nprobe=all engine run diverged from the "
+            "brute-force run on the same seed"
+        )
+    return ratios
+
+
 def freshness_sweep(smoke: bool = False):
     """Freshness frontier (DESIGN.md §11): churn rate × TTL policy on the
     churn workload against a MutableWorld, charting accuracy vs hit rate.

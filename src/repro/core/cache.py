@@ -68,6 +68,17 @@ class CortexCache:
         self.store = SEStoreMapping(self.soa)  # dict-like se_id -> SE view
         self.usage = 0
         self.stats = CacheStats()
+        # stage-1 scan accounting (DESIGN.md §12). Deliberately NOT in
+        # CacheStats: scan volume is batch-granularity dependent (a
+        # scalar replay scans the index once per QUERY, a batched run
+        # once per PASS), and CacheStats holds only quantities the
+        # scalar and batched paths must agree on — same reasoning that
+        # keeps warm_lookups in TierStats. ``last_scan_rows`` is the
+        # most recent pass (both tiers), consumed synchronously by the
+        # engine for the scan-proportional latency term;
+        # ``rows_scanned`` is the running total.
+        self.last_scan_rows = 0
+        self.rows_scanned = 0
         self._next_id = 0
         # freshness seam: the tiered cache fires this when a warm entry
         # re-enters HOT, so the FreshnessManager can re-arm its
@@ -105,6 +116,8 @@ class CortexCache:
         found = self.seri.index.search_batch(
             np.asarray(q_embs), self.seri.top_k, self.seri.tau_sim
         )
+        self.last_scan_rows = self.seri.index.last_scanned
+        self.rows_scanned += self.last_scan_rows
         out = []
         for se_ids, sims in found:
             # revalidating rows are KNOWN stale (change-feed notice,
@@ -198,6 +211,12 @@ class CortexCache:
         self.stats.judge_calls += len(cands)
         if sims is None:
             sims = np.zeros(0, np.float32)
+        # full-sort audit (ISSUE 5): the COMPLETE descending order is
+        # semantically required here — the loop walks past winners whose
+        # rows vanished between stage 1 and judge completion — and
+        # len(scores) ≤ top_k (≤ 4 by default), so argpartition has
+        # nothing to win. Hot-path top-k selections use
+        # ``seri.topk_desc``/``topk_desc_stable`` instead.
         order = np.argsort(-np.asarray(scores))
         best = float(scores[order[0]]) if len(cands) else 0.0
         for j in order:
@@ -446,8 +465,17 @@ def make_cache(
     eviction: str = "lcfu",
     max_ttl: float = 3600.0,
     backend: str = "numpy",
+    cluster=None,
 ) -> CortexCache:
-    index = VectorIndex(index_capacity, dim, backend=backend)
+    """``cluster`` (a ``core.clustering.ClusterConfig``) switches stage 1
+    to the clustered IVF routing (DESIGN.md §12); None = brute force."""
+    router = None
+    if cluster is not None:
+        from repro.core.clustering import ClusterRouter
+
+        router = ClusterRouter(index_capacity, dim, cluster)
+    index = VectorIndex(index_capacity, dim, backend=backend,
+                        router=router)
     seri = Seri(index, judge, tau_sim=tau_sim, tau_lsm=tau_lsm, top_k=top_k)
     return CortexCache(
         seri, capacity_bytes=capacity_bytes, max_ttl=max_ttl,

@@ -31,6 +31,10 @@ class Recalibration:
 
 def precision_curve(scores: np.ndarray, labels: np.ndarray):
     """Sweep thresholds (descending scores); precision/recall at each."""
+    # full-sort audit (ISSUE 5): the cumulative TP/FP sweep needs EVERY
+    # threshold in order (find_threshold scans the whole curve), so this
+    # is not a top-k selection — and it runs off the serving path, once
+    # per recal tick over ≤ 512 samples. argsort stays.
     order = np.argsort(-scores)
     s = scores[order]
     l = labels[order].astype(np.float64)

@@ -32,13 +32,28 @@ class RowIndex:
     shared by the fp32 hot index below and the int8 warm index
     (``core/tiers.py::QuantIndex``): active mask, row→se_id mapping, row
     alloc/free. Subclasses own the storage arrays and zero them in
-    ``_clear_rows``, so the two tiers' row lifecycles cannot drift."""
+    ``_clear_rows``, so the two tiers' row lifecycles cannot drift.
 
-    def __init__(self, capacity: int, dim: int):
+    ``row_se`` is an int64 array (-1 = free) so batched search paths
+    resolve row→se_id with one fancy-indexed gather instead of a
+    per-candidate Python loop. An optional
+    :class:`~repro.core.clustering.ClusterRouter` observes the row
+    lifecycle (``note_add``/``note_remove``) to keep its cluster
+    buckets free-list-consistent (DESIGN.md §12)."""
+
+    def __init__(self, capacity: int, dim: int, router=None):
         self.capacity = capacity
         self.dim = dim
         self.active = np.zeros(capacity, bool)
-        self.row_se: list[Optional[int]] = [None] * capacity
+        self.row_se = np.full(capacity, -1, np.int64)
+        self.router = router
+        # rows touched by the most recent search_batch call (active rows
+        # for brute force; centroids + gathered members for the routed
+        # scan) — the engine's scan-proportional latency term
+        self.last_scanned = 0
+        # backends set these; the base dispatch only tests for presence
+        self._kernel_fn = None
+        self._ivf_kernel_fn = None
         self._free = list(range(capacity - 1, -1, -1))
 
     def __len__(self) -> int:
@@ -59,6 +74,25 @@ class RowIndex:
     def _clear_rows(self, ra: np.ndarray) -> None:
         raise NotImplementedError
 
+    def _routed_dispatch(self, q: np.ndarray, kernel_scan, routed_scan,
+                         brute_scan):
+        """The one stage-1 dispatch both index flavors share (the same
+        anti-drift rationale as ``topk_desc``): Pallas routed scan when
+        the backend has one and clusters exist, numpy routed scan when
+        the router is trained, brute force otherwise. Returns
+        ``(rows, scores, routed)`` — ``routed`` tells the caller to
+        apply the kernel NEG-slot row filter."""
+        ready = self.router is not None and self.router.ready
+        if ready and self._ivf_kernel_fn is not None and \
+                np.any(self.router.counts > 0):
+            return (*kernel_scan(), True)
+        if ready:
+            info = self.router.route(q)
+            if info is not None:
+                return (*routed_scan(info), True)
+        self.last_scanned = len(self)
+        return (*brute_scan(), False)
+
     def remove_rows(self, rows) -> None:
         """Batched removal: one fancy-indexed store per field."""
         rows = [r for r in rows if self.active[r]]
@@ -67,47 +101,103 @@ class RowIndex:
         ra = np.asarray(rows)
         self.active[ra] = False
         self._clear_rows(ra)
+        self.row_se[ra] = -1
+        if self.router is not None:
+            self.router.note_remove(ra)
         for r in rows:
-            self.row_se[r] = None
             self._free.append(r)
 
 
 def topk_desc(s: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
     """Per-row top-k, similarity-descending, over a (B, N) score matrix
-    (mutates ``s``): negate in place, ``argpartition``, stable argsort —
-    the one selection idiom both the fp32 and int8 (core/tiers.py)
-    indexes use, so their tie-break semantics cannot drift. Returns
-    (rows (B, k), vals (B, k))."""
+    (mutates ``s``): negate in place, ``argpartition``, then a
+    boundary-tie-exact stable sort — the one selection idiom both the
+    fp32 and int8 (core/tiers.py) indexes use, so their tie-break
+    semantics cannot drift. Returns (rows (B, k), vals (B, k)).
+
+    Ties break by ascending COLUMN index — an exact rule, not
+    argpartition luck: the candidate set is expanded to every value
+    tying the k-th (the ``topk_desc_stable`` idiom) so the result is
+    independent of the matrix layout. That is what makes the clustered
+    index's nprobe=all mode bit-identical to brute force (DESIGN.md
+    §12): the routed union scores the same values at different column
+    positions, and a layout-dependent tie pick (exact-duplicate
+    embeddings — judge false-negative re-inserts — tying at the
+    boundary) would diverge. Ascending-column also matches the Pallas
+    kernels' tie order (per-tile argmax + lax.top_k both prefer the
+    lowest index)."""
+    b, m = s.shape
+    k_eff = min(k, m)
     np.negative(s, out=s)                             # sort ascending
-    k_eff = min(k, s.shape[1])
     part = np.argpartition(s, k_eff - 1, axis=1)[:, :k_eff]
     psc = np.take_along_axis(s, part, axis=1)
-    order = np.argsort(psc, axis=1, kind="stable")
-    rows = np.take_along_axis(part, order, axis=1)
-    vals = -np.take_along_axis(psc, order, axis=1)
+    rows = np.empty((b, k_eff), part.dtype)
+    vals = np.empty((b, k_eff), s.dtype)
+    for i in range(b):
+        thr = psc[i].max()
+        sel = np.flatnonzero(s[i] <= thr)   # superset incl. boundary ties
+        order = sel[np.argsort(s[i, sel], kind="stable")][:k_eff]
+        rows[i] = order
+        vals[i] = -s[i, order]
     return rows, vals
 
 
-class VectorIndex(RowIndex):
-    """Fixed-capacity embedding store with free-list row management."""
+def topk_desc_stable(v: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the ``k`` largest values of 1-D ``v``, descending,
+    ties broken by ascending position — EXACTLY
+    ``np.argsort(-v, kind="stable")[:k]``, but O(n + t·log t) via
+    ``argpartition`` with the boundary-tie expansion trick the SoA
+    victim selector uses (``se_store._smallest_in_order``): the
+    partition's candidate set is widened to every value tying the k-th,
+    so a tie group split by the partition boundary cannot change which
+    elements survive. The per-candidate rescore selections
+    (``core/tiers.py``) use this instead of a full sort."""
+    m = v.shape[0]
+    k = min(k, m)
+    if k <= 0:
+        return np.zeros(0, np.intp)
+    if k >= m:
+        return np.argsort(-v, kind="stable")
+    neg = -v
+    part = np.argpartition(neg, k - 1)[:k]
+    thr = neg[part].max()
+    sel = np.flatnonzero(neg <= thr)       # superset incl. boundary ties
+    return sel[np.argsort(neg[sel], kind="stable")][:k]
 
-    def __init__(self, capacity: int, dim: int, backend: str = "numpy"):
-        super().__init__(capacity, dim)
+
+class VectorIndex(RowIndex):
+    """Fixed-capacity embedding store with free-list row management.
+
+    With a :class:`~repro.core.clustering.ClusterRouter` attached,
+    stage 1 runs as a clustered (IVF-style) routed scan — centroids
+    first, then only the selected clusters' member rows — instead of
+    the full-matrix brute force (DESIGN.md §12). Until the router has
+    trained (or without one) the brute path runs unchanged."""
+
+    def __init__(self, capacity: int, dim: int, backend: str = "numpy",
+                 router=None):
+        super().__init__(capacity, dim, router=router)
         self.backend = backend
         self.emb = np.zeros((capacity, dim), np.float32)
-        self._kernel_fn = None
         if backend == "kernel":
-            from repro.kernels.ops import ann_topk_jit
+            from repro.kernels.ops import ann_topk_ivf_jit, ann_topk_jit
 
             self._kernel_fn = ann_topk_jit
+            self._ivf_kernel_fn = ann_topk_ivf_jit
 
     def add(self, se_id: int, embedding: np.ndarray) -> int:
         row = self._alloc(se_id)
         self.emb[row] = embedding
+        if self.router is not None:
+            self.router.note_add(row, self.emb[row], self)
         return row
 
     def _clear_rows(self, ra: np.ndarray) -> None:
         self.emb[ra] = 0.0
+
+    def route_embs(self, rows: np.ndarray) -> np.ndarray:
+        """Unit-norm fp32 rows for centroid training/assignment."""
+        return self.emb[rows]
 
     # ----------------------------------------------------------- search
 
@@ -116,33 +206,75 @@ class VectorIndex(RowIndex):
         Returns (se_ids, sims) sorted by similarity desc."""
         return self.search_batch(q[None], k, tau_sim)[0]
 
+    def _search_routed(self, q: np.ndarray, k: int, routed):
+        """Scan only the routed clusters' member rows. The gathered
+        union is in ascending row order and the not-allowed mask uses
+        the same -1.0 sentinel as the brute path's inactive mask, so at
+        nprobe=all the scored matrix is exactly the brute matrix
+        restricted to active rows — same values, same tie order."""
+        g_rows, allowed, self.last_scanned = routed
+        s = np.where(allowed, q @ self.emb[g_rows].T, -1.0)
+        lrows, sims = topk_desc(s, k)                          # (B, k)
+        return g_rows[lrows], sims
+
+    def _search_routed_kernel(self, q: np.ndarray, k: int):
+        """Routed scan on the Pallas backend: routing (centroid scores +
+        top-nprobe) runs INSIDE the jit wrapper, so no host-side
+        route()/gather happens at all — rows-scanned accounting derives
+        from the kernel's own cluster selection."""
+        rt = self.router
+        layout, bucket_rows, bucket_valid = rt.kernel_buckets(self)
+        nprobe = rt.cfg.n_clusters if rt.cfg.nprobe is None \
+            else min(rt.cfg.nprobe, rt.cfg.n_clusters)
+        live = rt.counts > 0
+        sims, rows, sel, en = self._ivf_kernel_fn(
+            rt.centroids, live.astype(np.int32), layout,
+            bucket_rows, bucket_valid, q, nprobe, k,
+        )
+        probed = np.unique(np.asarray(sel)[np.asarray(en) > 0])
+        self.last_scanned = int(live.sum() + rt.counts[probed].sum())
+        return np.asarray(rows), np.asarray(sims)
+
+    def _search_brute(self, q: np.ndarray, k: int):
+        if self._kernel_fn is not None:
+            sims, rows = self._kernel_fn(self.emb, self.active, q, k)
+            return np.asarray(rows), np.asarray(sims)
+        # (B, N) row-major so the per-query partition/sort runs over
+        # contiguous lanes (axis=0 on (N, B) is strided and ~3× slower
+        # at large N·B)
+        s = np.where(self.active[None, :], q @ self.emb.T, -1.0)
+        rows, sims = topk_desc(s, k)                           # (B, k)
+        return rows, sims
+
     def search_batch(self, q: np.ndarray, k: int, tau_sim: float):
         """Batched stage-1: q (B, dim) -> list of B (se_ids, sims) pairs.
 
-        One masked matmul over the whole query block; per-column top-k via
-        ``argpartition`` along axis 0. Each column's result is identical to
-        the single-query path (numpy partitions/sorts each 1-D lane
+        One masked matmul over the whole query block (brute) or over the
+        routed cluster union (IVF); per-column top-k via ``argpartition``
+        along axis 0. Each column's result is identical to the
+        single-query path (numpy partitions/sorts each 1-D lane
         independently), so batching never changes retrieval semantics.
         """
         b = q.shape[0]
         if len(self) == 0:
+            self.last_scanned = 0
             empty = ([], np.zeros(0, np.float32))
             return [empty] * b
-        if self._kernel_fn is not None:
-            sims, rows = self._kernel_fn(self.emb, self.active, q, k)
-            sims = np.asarray(sims)
-            rows = np.asarray(rows)
-        else:
-            # (B, N) row-major so the per-query partition/sort below runs
-            # over contiguous lanes (axis=0 on (N, B) is strided and ~3×
-            # slower at large N·B)
-            s = np.where(self.active[None, :], q @ self.emb.T, -1.0)
-            rows, sims = topk_desc(s, k)                       # (B, k)
+        q = np.asarray(q, np.float32)
+        rows, sims, routed = self._routed_dispatch(
+            q,
+            lambda: self._search_routed_kernel(q, k),
+            lambda info: self._search_routed(q, k, info),
+            lambda: self._search_brute(q, k),
+        )
         out = []
         for i in range(b):
             keep = sims[i] >= tau_sim
+            if routed:
+                keep &= rows[i] >= 0   # kernel NEG slots carry row -1
             r = rows[i][keep]
-            out.append(([self.row_se[j] for j in r],
+            # row→se_id as ONE int64 gather (no per-candidate Python loop)
+            out.append((self.row_se[r].tolist(),
                         sims[i][keep].astype(np.float32)))
         return out
 

@@ -40,9 +40,11 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.core.cache import CortexCache
+from repro.core.clustering import ClusterConfig, ClusterRouter
 from repro.core.se_store import SEStore
 from repro.core.semantic_element import SemanticElement
-from repro.core.seri import RowIndex, Seri, VectorIndex, topk_desc
+from repro.core.seri import (RowIndex, Seri, VectorIndex, topk_desc,
+                             topk_desc_stable)
 
 NEG = -3.0e38  # matches kernels/ann_topk_quant.NEG (masked-row sentinel)
 
@@ -87,8 +89,8 @@ class QuantIndex(RowIndex):
     """
 
     def __init__(self, capacity: int, dim: int, backend: str = "numpy",
-                 rescore_mult: int = 4):
-        super().__init__(capacity, dim)
+                 rescore_mult: int = 4, router=None):
+        super().__init__(capacity, dim, router=router)
         self.backend = backend
         self.rescore_mult = rescore_mult
         self.emb_q = np.zeros((capacity, dim), np.int8)
@@ -99,11 +101,12 @@ class QuantIndex(RowIndex):
         # a host-simulation artifact.
         self._emb_i32 = np.zeros((capacity, dim), np.int32)
         self.scale = np.zeros(capacity, np.float32)
-        self._kernel_fn = None
         if backend == "kernel":
-            from repro.kernels.ops import ann_topk_quant_jit
+            from repro.kernels.ops import (ann_topk_ivf_quant_jit,
+                                           ann_topk_quant_jit)
 
             self._kernel_fn = ann_topk_quant_jit
+            self._ivf_kernel_fn = ann_topk_ivf_quant_jit
 
     def add(self, se_id: int, embedding: np.ndarray) -> int:
         row = self._alloc(se_id)
@@ -111,12 +114,24 @@ class QuantIndex(RowIndex):
         self.emb_q[row] = q[0]
         self._emb_i32[row] = q[0]
         self.scale[row] = s[0]
+        if self.router is not None:
+            self.router.note_add(
+                row, np.asarray(embedding, np.float32), self
+            )
         return row
 
     def _clear_rows(self, ra: np.ndarray) -> None:
         self.emb_q[ra] = 0
         self._emb_i32[ra] = 0
         self.scale[ra] = 0.0
+
+    def route_embs(self, rows: np.ndarray) -> np.ndarray:
+        """Dequantized, renormalized fp32 rows for centroid training —
+        the router sees (near enough) the same vectors the fine rescore
+        phase does, so quantization error cannot skew routing."""
+        v = self.emb_q[rows].astype(np.float32) * self.scale[rows][:, None]
+        n = np.linalg.norm(v, axis=1, keepdims=True)
+        return v / np.maximum(n, 1e-30)
 
     def dequantize(self, row: int) -> np.ndarray:
         """fp32 reconstruction, renormalized to unit length (the hot
@@ -130,33 +145,76 @@ class QuantIndex(RowIndex):
     def search(self, q: np.ndarray, k: int, tau_sim: float):
         return self.search_batch(q[None], k, tau_sim)[0]
 
+    def _coarse_routed(self, qq, qs, r: int, routed):
+        """Quantized coarse scan over the routed cluster union only —
+        same int32 math and scale-multiply order as the brute path, so
+        at nprobe=all the scored matrix is the brute matrix restricted
+        to active rows (same values, same tie order)."""
+        g_rows, allowed, self.last_scanned = routed
+        s = (qq.astype(np.int32) @ self._emb_i32[g_rows].T
+             ).astype(np.float32)
+        s = s * self.scale[g_rows][None, :]
+        s = s * qs[:, None]
+        s = np.where(allowed, s, NEG)
+        lrows, vals = topk_desc(s, r)                         # (B, r)
+        return g_rows[lrows], vals
+
+    def _coarse_routed_kernel(self, q, qq, qs, r: int):
+        """Routed coarse scan on the Pallas backend: routing runs inside
+        the jit wrapper (fp32 query vs centroids), no host-side
+        route()/gather; rows-scanned derives from the kernel's own
+        cluster selection."""
+        rt = self.router
+        (bq, bscale), bucket_rows, bucket_valid = \
+            rt.kernel_buckets(self, quant=True)
+        nprobe = rt.cfg.n_clusters if rt.cfg.nprobe is None \
+            else min(rt.cfg.nprobe, rt.cfg.n_clusters)
+        live = rt.counts > 0
+        vals, rows, sel, en = self._ivf_kernel_fn(
+            rt.centroids, live.astype(np.int32), bq,
+            bscale, bucket_rows, bucket_valid, q, qq, qs, nprobe, r,
+        )
+        probed = np.unique(np.asarray(sel)[np.asarray(en) > 0])
+        self.last_scanned = int(live.sum() + rt.counts[probed].sum())
+        return np.asarray(rows), np.asarray(vals)
+
+    def _coarse_brute(self, qq, qs, r: int):
+        if self._kernel_fn is not None:
+            vals, rows = self._kernel_fn(
+                self.emb_q, self.scale, self.active, qq, qs, r
+            )
+            return np.asarray(rows), np.asarray(vals)
+        # (B, N) row-major, same layout rationale as VectorIndex;
+        # scale multiply order matches the kernel exactly
+        s = (qq.astype(np.int32) @ self._emb_i32.T).astype(np.float32)
+        s = s * self.scale[None, :]
+        s = s * qs[:, None]
+        s = np.where(self.active[None, :], s, NEG)
+        rows, vals = topk_desc(s, r)                          # (B, r)
+        return rows, vals
+
     def search_batch(self, q: np.ndarray, k: int, tau_sim: float):
         """q (B, dim) fp32 unit-norm -> list of B (se_ids, sims) pairs,
         similarity-descending, gated at tau_sim on the RESCORED sims."""
         b = q.shape[0]
         if len(self) == 0:
+            self.last_scanned = 0
             empty = ([], np.zeros(0, np.float32))
             return [empty] * b
         q = np.asarray(q, np.float32)
         r = max(k * self.rescore_mult, k)
         qq, qs = quantize_rows(q)
-        if self._kernel_fn is not None:
-            vals, rows = self._kernel_fn(
-                self.emb_q, self.scale, self.active, qq, qs, r
-            )
-            vals = np.asarray(vals)
-            rows = np.asarray(rows)
-        else:
-            # (B, N) row-major, same layout rationale as VectorIndex;
-            # scale multiply order matches the kernel exactly
-            s = (qq.astype(np.int32) @ self._emb_i32.T).astype(np.float32)
-            s = s * self.scale[None, :]
-            s = s * qs[:, None]
-            s = np.where(self.active[None, :], s, NEG)
-            rows, vals = topk_desc(s, r)                      # (B, r)
+        rows, vals, routed = self._routed_dispatch(
+            q,
+            lambda: self._coarse_routed_kernel(q, qq, qs, r),
+            lambda info: self._coarse_routed(qq, qs, r, info),
+            lambda: self._coarse_brute(qq, qs, r),
+        )
         out = []
         for i in range(b):
             keep = vals[i] > NEG / 2          # drop masked/duplicate slots
+            if routed:
+                keep &= rows[i] >= 0   # kernel NEG slots carry row -1
             rs = rows[i][keep]
             if not len(rs):
                 out.append(([], np.zeros(0, np.float32)))
@@ -165,10 +223,13 @@ class QuantIndex(RowIndex):
             deq = self.emb_q[rs].astype(np.float32) * \
                 self.scale[rs][:, None]
             sims = deq @ q[i]
-            order = np.argsort(-sims, kind="stable")[:min(k, len(rs))]
+            # top-k of the R finalists via argpartition with exact
+            # stable-argsort tie parity (the ISSUE 5 full-sort audit)
+            order = topk_desc_stable(sims, min(k, len(rs)))
             sims_k = sims[order].astype(np.float32)
             gate = sims_k >= tau_sim
-            out.append(([self.row_se[j] for j in rs[order][gate]],
+            # row→se_id as ONE int64 gather (no per-candidate loop)
+            out.append((self.row_se[rs[order][gate]].tolist(),
                         sims_k[gate]))
         return out
 
@@ -253,14 +314,15 @@ class WarmTier:
 
     def __init__(self, capacity_bytes: int, dim: int, *,
                  index_capacity: int = 8192, backend: str = "numpy",
-                 value_ratio: float = 0.4, rescore_mult: int = 4):
+                 value_ratio: float = 0.4, rescore_mult: int = 4,
+                 router=None):
         # NOTE: the warm tier's extra access latency is an ENGINE-side
         # virtual-time cost (EngineConfig.t_cache_warm, like t_cache_cpu)
         # — it is deliberately not duplicated here
         self.capacity_bytes = capacity_bytes
         self.value_ratio = value_ratio
         self.index = QuantIndex(index_capacity, dim, backend=backend,
-                                rescore_mult=rescore_mult)
+                                rescore_mult=rescore_mult, router=router)
         self.soa = SEStore(index_capacity)
         # soa.size holds the WARM (compressed) footprint for capacity and
         # per-byte LCFU scoring; the original size rides alongside for
@@ -496,6 +558,10 @@ class TieredCache(CortexCache):
             wfound = self.warm.search_batch(
                 q_embs[warm_qi], self.seri.top_k, self.seri.tau_sim, now
             )
+            # the warm coarse scan's rows join the pass's scan-
+            # proportional latency term (DESIGN.md §12)
+            self.last_scan_rows += self.warm.index.last_scanned
+            self.rows_scanned += self.warm.index.last_scanned
             for bi, (wc, wsims) in zip(warm_qi, wfound):
                 # the consult FACT (flowing back through
                 # stage1_batch_flagged) feeds the engine's per-tier
@@ -610,11 +676,24 @@ def make_tiered_cache(
     warm_backend: Optional[str] = None,
     warm_value_ratio: float = 0.4,
     rescore_mult: int = 4,
+    cluster: Optional[ClusterConfig] = None,
 ) -> TieredCache:
     """Factory mirroring ``make_cache``: hot fp32 index + seri in front of
     an int8 warm tier. ``warm_backend`` defaults to the hot backend
-    ("kernel" → the quantized Pallas kernel)."""
-    index = VectorIndex(index_capacity, dim, backend=backend)
+    ("kernel" → the quantized Pallas kernel). ``cluster`` enables the
+    clustered stage-1 routing (DESIGN.md §12) on BOTH tiers — each tier
+    gets its own router instance (the warm seed offset by 1 so the two
+    tiers' mini-batch draws are independent)."""
+    hot_router = warm_router = None
+    if cluster is not None:
+        wcap = warm_index_capacity or index_capacity
+        hot_router = ClusterRouter(index_capacity, dim, cluster)
+        warm_router = ClusterRouter(
+            wcap, dim,
+            dataclasses.replace(cluster, seed=cluster.seed + 1),
+        )
+    index = VectorIndex(index_capacity, dim, backend=backend,
+                        router=hot_router)
     seri = Seri(index, judge, tau_sim=tau_sim, tau_lsm=tau_lsm, top_k=top_k)
     warm = WarmTier(
         warm_bytes, dim,
@@ -622,6 +701,7 @@ def make_tiered_cache(
         backend=warm_backend or backend,
         value_ratio=warm_value_ratio,
         rescore_mult=rescore_mult,
+        router=warm_router,
     )
     return TieredCache(
         seri, warm=warm, capacity_bytes=hot_bytes, max_ttl=max_ttl,

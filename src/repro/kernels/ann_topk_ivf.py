@@ -1,0 +1,171 @@
+"""Pallas TPU kernels for the clustered (IVF) stage-1 routed scan.
+
+Brute-force ``ann_topk`` streams the WHOLE embedding matrix HBM→VMEM on
+every lookup; at million-entry cache sizes stage 1 becomes bandwidth-
+bound on its own index (DESIGN.md §12). The IVF layout fixes the
+bytes-moved term: embeddings live in **cluster-major buckets** (C,
+bucket_cap, D) maintained by ``core/clustering.py``, and the kernel
+scans only the ``nprobe`` buckets each query routed to.
+
+Routing is data-dependent, so the scan uses
+``pltpu.PrefetchScalarGridSpec``: the per-(query, probe) selected
+cluster ids ``sel`` are scalar-prefetched, and the bucket BlockSpec's
+index map reads ``sel[b, j]`` to DMA exactly the selected bucket for
+grid step (b, j) — the TPU equivalent of Faiss's inverted-list gather.
+The centroid scoring + top-``nprobe`` selection happens in the same jit
+scope (``kernels/ops.py`` wrappers) with a plain MXU matmul: it cannot
+live inside the scan's ``pallas_call`` because the grid's index maps
+need ``sel`` before the first step launches.
+
+Two variants share the structure (mirroring ``ann_topk`` vs
+``ann_topk_quant``):
+
+  * ``ann_topk_ivf``       — fp32 buckets, exact scores (HOT tier);
+  * ``ann_topk_ivf_quant`` — int8 buckets + per-row scales, int32
+    accumulate, approximate coarse scores for the WARM tier's
+    coarse/rescore pipeline (the host rescores finalists in fp32).
+
+Per grid step: one (bucket_cap, D) slab · one query row on the MXU,
+invalid slots and disabled probes masked to NEG, per-step top-k via k
+max/argmax passes (the ``ann_topk`` idiom). The (nprobe · k) finalists
+per query merge in one ``lax.top_k`` outside the kernel. Disabled
+probes (query routed to fewer than ``nprobe`` non-empty clusters) emit
+NEG rows that callers drop via ``vals > NEG / 2``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -3.0e38  # plain float: jnp scalars would be captured consts in pallas
+
+
+def _ivf_kernel(sel_ref, en_ref, q_ref, bucket_ref, valid_ref, vals_ref,
+                idx_ref, *, k: int):
+    """Grid step (b, j): scan bucket ``sel[b, j]`` for query b."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    bucket = bucket_ref[0]                   # (cap, D)
+    q = q_ref[...]                           # (1, D)
+    s = jax.lax.dot_general(
+        bucket, q,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                        # (cap, 1)
+    ok = (valid_ref[...] > 0)[0] & (en_ref[b, j] > 0)
+    s = jnp.where(ok[:, None], s, NEG)
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    for t in range(k):
+        v = jnp.max(s, axis=0)               # (1,)
+        i = jnp.argmax(s, axis=0)            # (1,) slot within bucket
+        vals_ref[0, 0, t] = v[0]
+        idx_ref[0, 0, t] = i.astype(jnp.int32)[0]
+        s = jnp.where(rows == i[None, :], NEG, s)
+
+
+def _ivf_quant_kernel(sel_ref, en_ref, qq_ref, qs_ref, bucket_ref,
+                      scale_ref, valid_ref, vals_ref, idx_ref, *, k: int):
+    """int8 variant: int32-exact scores rescaled like ann_topk_quant
+    (row scale first, then query scale — bit-matching the numpy path)."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    bucket = bucket_ref[0]                   # (cap, D) int8
+    qq = qq_ref[...]                         # (1, D) int8
+    s = jax.lax.dot_general(
+        bucket, qq,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )                                        # (cap, 1) exact int32
+    s = s.astype(jnp.float32) * scale_ref[...][0][:, None]
+    s = s * qs_ref[b]
+    ok = (valid_ref[...] > 0)[0] & (en_ref[b, j] > 0)
+    s = jnp.where(ok[:, None], s, NEG)
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    for t in range(k):
+        v = jnp.max(s, axis=0)
+        i = jnp.argmax(s, axis=0)
+        vals_ref[0, 0, t] = v[0]
+        idx_ref[0, 0, t] = i.astype(jnp.int32)[0]
+        s = jnp.where(rows == i[None, :], NEG, s)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def ann_topk_ivf(sel, enabled, q, buckets, bucket_valid, k: int = 4, *,
+                 interpret: bool = True):
+    """Routed fp32 scan. sel/enabled (B, nprobe) int32; q (B, D);
+    buckets (C, cap, D); bucket_valid (C, cap) -> per-probe finalists
+    (vals (B, nprobe, k), slots (B, nprobe, k)).
+
+    interpret=True executes the kernel body on CPU (this container);
+    on TPU pass interpret=False for the Mosaic lowering.
+    """
+    b, nprobe = sel.shape
+    _, cap, d = buckets.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,               # sel, enabled
+        grid=(b, nprobe),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda bi, j, sel, en: (bi, 0)),
+            pl.BlockSpec((1, cap, d),
+                         lambda bi, j, sel, en: (sel[bi, j], 0, 0)),
+            pl.BlockSpec((1, cap),
+                         lambda bi, j, sel, en: (sel[bi, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, k), lambda bi, j, sel, en: (bi, j, 0)),
+            pl.BlockSpec((1, 1, k), lambda bi, j, sel, en: (bi, j, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_ivf_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nprobe, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, nprobe, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sel, enabled, q, buckets, bucket_valid)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def ann_topk_ivf_quant(sel, enabled, qq, q_scales, buckets_q, bucket_scale,
+                       bucket_valid, k: int = 16, *,
+                       interpret: bool = True):
+    """Routed int8 coarse scan. qq (B, D) int8; q_scales (B,) f32;
+    buckets_q (C, cap, D) int8; bucket_scale (C, cap) f32 -> per-probe
+    coarse finalists (vals, slots) as in :func:`ann_topk_ivf`. ``vals``
+    are approximate — callers rescore in fp32 before the τ_sim gate.
+    """
+    b, nprobe = sel.shape
+    _, cap, d = buckets_q.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nprobe),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda bi, j, sel, en: (bi, 0)),
+            pl.BlockSpec((b,), lambda bi, j, sel, en: (0,)),
+            pl.BlockSpec((1, cap, d),
+                         lambda bi, j, sel, en: (sel[bi, j], 0, 0)),
+            pl.BlockSpec((1, cap),
+                         lambda bi, j, sel, en: (sel[bi, j], 0)),
+            pl.BlockSpec((1, cap),
+                         lambda bi, j, sel, en: (sel[bi, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, k), lambda bi, j, sel, en: (bi, j, 0)),
+            pl.BlockSpec((1, 1, k), lambda bi, j, sel, en: (bi, j, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_ivf_quant_kernel, k=k),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nprobe, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, nprobe, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sel, enabled, qq, q_scales, buckets_q, bucket_scale, bucket_valid)

@@ -7,15 +7,19 @@ assert_allclose kernel-vs-ref.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.ann_topk import ann_topk
+from repro.kernels.ann_topk_ivf import NEG, ann_topk_ivf, ann_topk_ivf_quant
 from repro.kernels.ann_topk_quant import ann_topk_quant
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention_fwd
 
-__all__ = ["ann_topk", "ann_topk_quant", "flash_attention_fwd",
-           "decode_attention", "ann_topk_jit", "ann_topk_quant_jit"]
+__all__ = ["ann_topk", "ann_topk_quant", "ann_topk_ivf",
+           "ann_topk_ivf_quant", "flash_attention_fwd",
+           "decode_attention", "ann_topk_jit", "ann_topk_quant_jit",
+           "ann_topk_ivf_jit", "ann_topk_ivf_quant_jit"]
 
 
 _B_ALIGN = 8  # fp32 sublane count: pad the query block to aligned shapes
@@ -44,6 +48,75 @@ def ann_topk_jit(emb, active, q, k: int = 4):
     if single:
         return vals[0], rows[0]
     return vals, rows
+
+
+def _route(centroids, live, q, nprobe: int):
+    """Centroid scoring + top-``nprobe`` cluster selection — the routing
+    half of the fused IVF scan, in the same jit scope as the
+    ``pallas_call`` (it cannot live inside it: the scan grid's
+    scalar-prefetch index maps need ``sel`` before the first step)."""
+    cs = jnp.where(jnp.asarray(live) > 0,
+                   jnp.asarray(q) @ jnp.asarray(centroids).T, NEG)
+    svals, sel = jax.lax.top_k(cs, nprobe)
+    return sel.astype(jnp.int32), (svals > NEG / 2).astype(jnp.int32)
+
+
+def _merge_probes(vals, slots, sel, bucket_rows, k: int):
+    """(B, nprobe, k) per-probe finalists -> (B, kk) global top-k.
+    Disabled probes carry NEG vals and row -1; callers filter on
+    ``vals > NEG / 2``."""
+    rows = jnp.where(vals > NEG / 2,
+                     jnp.asarray(bucket_rows)[sel[:, :, None], slots], -1)
+    b, nprobe, kk_in = vals.shape
+    flat_v = vals.reshape(b, nprobe * kk_in)
+    flat_r = rows.reshape(b, nprobe * kk_in)
+    kk = min(k, nprobe * kk_in)
+    top_v, pos = jax.lax.top_k(flat_v, kk)
+    top_r = jnp.take_along_axis(flat_r, pos, axis=1)
+    return top_v, top_r
+
+
+def ann_topk_ivf_jit(centroids, live, buckets, bucket_rows, bucket_valid,
+                     q, nprobe: int, k: int = 4):
+    """Clustered VectorIndex backend adapter: route the (B, D) query
+    block against the centroids, scan only the selected buckets
+    (scalar-prefetch Pallas kernel), merge per-probe finalists. Returns
+    ``(vals (B, kk), rows (B, kk), sel, enabled)`` — rows are global
+    index rows (-1 where masked); sel/enabled feed the host's
+    rows-scanned accounting."""
+    b = q.shape[0]
+    pad = (-b) % _B_ALIGN
+    q = jnp.asarray(q)
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+    sel, enabled = _route(centroids, live, q, nprobe)
+    vals, slots = ann_topk_ivf(sel, enabled, q, jnp.asarray(buckets),
+                               jnp.asarray(bucket_valid), k)
+    top_v, top_r = _merge_probes(vals, slots, sel, bucket_rows, k)
+    return top_v[:b], top_r[:b], sel[:b], enabled[:b]
+
+
+def ann_topk_ivf_quant_jit(centroids, live, buckets_q, bucket_scale,
+                           bucket_rows, bucket_valid, q, qq, q_scales,
+                           nprobe: int, k: int = 16):
+    """Clustered QuantIndex backend adapter (coarse phase only): routing
+    runs on the fp32 query against the fp32 centroids; the bucket scan
+    is fully quantized (int8 × int8, int32 accumulate), mirroring the
+    brute ``ann_topk_quant`` coarse/rescore split."""
+    b = qq.shape[0]
+    pad = (-b) % _B_ALIGN
+    q, qq, q_scales = jnp.asarray(q), jnp.asarray(qq), jnp.asarray(q_scales)
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+        qq = jnp.pad(qq, ((0, pad), (0, 0)))
+        q_scales = jnp.pad(q_scales, (0, pad))
+    sel, enabled = _route(centroids, live, q, nprobe)
+    vals, slots = ann_topk_ivf_quant(
+        sel, enabled, qq, q_scales, jnp.asarray(buckets_q),
+        jnp.asarray(bucket_scale), jnp.asarray(bucket_valid), k,
+    )
+    top_v, top_r = _merge_probes(vals, slots, sel, bucket_rows, k)
+    return top_v[:b], top_r[:b], sel[:b], enabled[:b]
 
 
 def ann_topk_quant_jit(emb_q, scales, active, qq, q_scales, k: int = 16):

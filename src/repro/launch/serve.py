@@ -10,6 +10,7 @@ import argparse
 import json
 
 from repro.core.cache import make_cache
+from repro.core.clustering import ClusterConfig
 from repro.core.freshness import ChangeFeed, FreshnessConfig, FreshnessManager
 from repro.core.judge import OracleJudge
 from repro.core.tiers import make_tiered_cache
@@ -69,6 +70,10 @@ def run_once(
     refresh_ahead: bool = False,
     feed_delay: float = 0.15,
     refresh_min_freq: int = 1,
+    cluster: bool = False,
+    n_clusters: int = 64,
+    nprobe: int | None = 8,
+    t_cache_per_row: float = 0.0,
     seed: int = 0,
 ) -> dict:
     # churn_period switches the ground truth to a MutableWorld whose
@@ -89,6 +94,11 @@ def run_once(
     cache = exact = None
     if mode in ("cortex", "cortex-nojudge"):
         judge = OracleJudge(world, accuracy=judge_acc, seed=seed + 2)
+        # clustered (IVF) stage-1 routing, DESIGN.md §12; nprobe=None
+        # probes every cluster (the brute-force-parity mode)
+        ccfg = ClusterConfig(
+            n_clusters=n_clusters, nprobe=nprobe, seed=seed + 5,
+        ) if cluster else None
         if warm_frac:
             # tiered storage at EQUAL total bytes: the warm slice comes
             # OUT of the same budget, it is never additional capacity
@@ -98,12 +108,12 @@ def run_once(
             cache = make_tiered_cache(
                 hot_bytes=cap - warm_bytes, warm_bytes=warm_bytes,
                 dim=dim, judge=judge, eviction=eviction, max_ttl=max_ttl,
-                warm_value_ratio=warm_value_ratio,
+                warm_value_ratio=warm_value_ratio, cluster=ccfg,
             )
         else:
             cache = make_cache(
                 capacity_bytes=cap, dim=dim, judge=judge, eviction=eviction,
-                max_ttl=max_ttl,
+                max_ttl=max_ttl, cluster=ccfg,
             )
     elif mode == "exact":
         exact = ExactCache(cap, max_ttl=max_ttl)
@@ -136,6 +146,7 @@ def run_once(
             judge_timeout=judge_timeout,
             warmup_frac=warmup_frac,
             t_cache_warm=warm_access_latency,
+            t_cache_per_row=t_cache_per_row,
             seed=seed + 4,
         ),
         clock=clock,
@@ -158,6 +169,15 @@ def main(argv=None):
     ap.add_argument("--warm-frac", type=float, default=None,
                     help="split this fraction of the byte budget into an "
                          "int8/zlib warm tier (DESIGN.md §10)")
+    ap.add_argument("--cluster", action="store_true",
+                    help="clustered (IVF) stage-1 routing (DESIGN.md §12)")
+    ap.add_argument("--n-clusters", type=int, default=64)
+    ap.add_argument("--nprobe", type=int, default=8,
+                    help="clusters probed per query; 0 = all (the "
+                         "brute-force-parity mode)")
+    ap.add_argument("--t-cache-per-row", type=float, default=0.0,
+                    help="stage-1 latency per row scanned (the scan-"
+                         "proportional model; 0 = legacy flat cost)")
     ap.add_argument("--mode", default="cortex",
                     choices=["vanilla", "exact", "cortex", "cortex-nojudge"])
     ap.add_argument("--n-requests", type=int, default=800)
@@ -188,6 +208,10 @@ def main(argv=None):
         churn_period=args.churn_period,
         invalidation=args.invalidation,
         refresh_ahead=args.refresh_ahead,
+        cluster=args.cluster,
+        n_clusters=args.n_clusters,
+        nprobe=args.nprobe or None,
+        t_cache_per_row=args.t_cache_per_row,
         seed=args.seed,
     )
     print(json.dumps(s, indent=2, default=float))

@@ -278,6 +278,7 @@ class FederationRunner:
         engine_cfg: Optional[EngineConfig] = None,
         gpu_cfg: Optional[GPUConfig] = None,
         warm_frac: Optional[float] = None,
+        cluster=None,  # ClusterConfig -> IVF stage-1 routing (§12)
         freshness=None,  # FreshnessConfig -> per-region managers (§11)
         seed: int = 0,
     ):
@@ -294,6 +295,20 @@ class FederationRunner:
         footprint = int(world._sizes.sum())
         base_cfg = engine_cfg or EngineConfig()
 
+        # per-region router seeds: each region's cache clusters its OWN
+        # rows (peek_semantic then routes peer probes through the same
+        # sublinear scan, so federation peeks stay cheap at scale)
+        self._next_region = 0
+
+        def region_cluster():
+            if cluster is None:
+                return None
+            ccfg = dataclasses.replace(
+                cluster, seed=cluster.seed + 10 * self._next_region
+            )
+            self._next_region += 1
+            return ccfg
+
         def build_cache(capacity: int, judge) -> CortexCache:
             # warm_frac splits each region's byte budget into a tiered
             # hot+warm pair at EQUAL total bytes (DESIGN.md §10) — peers
@@ -304,10 +319,11 @@ class FederationRunner:
                 warm_bytes = int(capacity * warm_frac)
                 return make_tiered_cache(
                     hot_bytes=capacity - warm_bytes, warm_bytes=warm_bytes,
-                    dim=world.dim, judge=judge,
+                    dim=world.dim, judge=judge, cluster=region_cluster(),
                 )
             return make_cache(
                 capacity_bytes=capacity, dim=world.dim, judge=judge,
+                cluster=region_cluster(),
             )
 
         # one origin change feed shared by every region; each region

@@ -13,6 +13,7 @@ continuous batching.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 from typing import Callable, Optional
@@ -35,7 +36,8 @@ class PSLane:
         self.v1 = v1
         self.slots = slots
         self.active: dict[int, Job] = {}
-        self.queue: list[Job] = []
+        # FIFO admission queue: deque so the promote-side popleft is O(1)
+        self.queue: collections.deque[Job] = collections.deque()
         self.t_last = 0.0
         self.version = 0
         self._ids = itertools.count()
@@ -83,7 +85,7 @@ class PSLane:
 
     def _promote(self, now: float) -> None:
         while self.queue and len(self.active) < self.slots:
-            job = self.queue.pop(0)
+            job = self.queue.popleft()
             job.started = now
             self.active[job.jid] = job
 

@@ -105,7 +105,7 @@ def test_exact_cache_expired_lookup_reclaims_usage():
     assert "a" not in c.d and "a" not in c.order
     assert c.lookup("b", now=15.0) is None
     assert c.usage == 0
-    assert c.order == []
+    assert list(c.order) == []  # order is a deque since ISSUE 5
     # reclaimed capacity is usable again without evicting anything
     c.insert("c", "vc", 900, now=16.0)
     assert c.usage == 900
