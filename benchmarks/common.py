@@ -21,15 +21,23 @@ DATASETS = {
 ROWS: list[dict] = []
 
 
-def emit(name: str, us_per_call: float, *, seed=None, **derived):
+def emit(name: str, us_per_call: float, *, seed=None, shards=None,
+         nprobe=None, **derived):
     """One benchmark row. ``seed`` lands as a first-class field in the
-    --json BENCH_*.json rows (alongside the git_sha benchmarks/run.py
-    stamps at write time) so cross-PR trajectory diffs can tell a code
-    change from a seed change; None = not seed-parameterized."""
-    kv = " ".join(f"{k}={v}" for k, v in derived.items())
+    --json BENCH_*.json rows (alongside the git_sha and device count
+    benchmarks/run.py stamps at write time) so cross-PR trajectory
+    diffs can tell a code change from a seed change; None = not
+    seed-parameterized. ``shards``/``nprobe`` are likewise first-class
+    (None = not shard/probe-parameterized): the mesh-sharded stage-1
+    rows (DESIGN.md §13) must be groupable by shard/mesh config without
+    parsing the free-form derived dict."""
+    first = {k: v for k, v in (("shards", shards), ("nprobe", nprobe))
+             if v is not None}
+    kv = " ".join(f"{k}={v}" for k, v in {**first, **derived}.items())
     print(f"{name},{us_per_call:.1f},{kv}")
     ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
-                 "seed": seed, "derived": derived})
+                 "seed": seed, "shards": shards, "nprobe": nprobe,
+                 "derived": derived})
 
 
 def run_ds(dataset: str, mode: str, **kw):

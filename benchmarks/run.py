@@ -73,6 +73,13 @@ def main() -> None:
     args = ap.parse_args()
     names = list(ALL) if not args.only else args.only.split(",")
     sha = git_sha() if args.json else "unknown"
+    devices = 0
+    if args.json:
+        # visible jax device count (XLA_FLAGS host-platform simulation
+        # included) — sharded stage-1 rows (DESIGN.md §13) are only
+        # comparable across runs with the same mesh width
+        import jax
+        devices = jax.device_count()
     print("name,us_per_call,derived")
     t0 = time.time()
     for n in names:
@@ -90,13 +97,16 @@ def main() -> None:
         finally:
             # write rows even when a regression gate SystemExits, so a
             # failing CI run still leaves the measurements behind. Every
-            # row is stamped with the git sha (and carries its seed when
-            # the benchmark is seed-parameterized) so BENCH_*.json files
-            # from different PRs diff cleanly.
+            # row is stamped with the git sha and the jax device count
+            # (and carries its seed / shard / nprobe config when the
+            # benchmark is so parameterized) so BENCH_*.json files from
+            # different PRs diff cleanly.
             if args.json:
-                rows = [dict(r, git_sha=sha) for r in common.ROWS]
+                rows = [dict(r, git_sha=sha, devices=devices)
+                        for r in common.ROWS]
                 with open(f"BENCH_{n}.json", "w") as f:
-                    json.dump({"name": n, "git_sha": sha, "rows": rows}, f,
+                    json.dump({"name": n, "git_sha": sha,
+                               "devices": devices, "rows": rows}, f,
                               indent=1, default=str)
         print(f"# {n} done in {time.time()-t:.1f}s", file=sys.stderr)
     print(f"# all benchmarks done in {time.time()-t0:.1f}s", file=sys.stderr)

@@ -79,6 +79,12 @@ class CortexCache:
         # ``rows_scanned`` is the running total.
         self.last_scan_rows = 0
         self.rows_scanned = 0
+        # max-over-shards companions (DESIGN.md §13): under a sharded
+        # router the shards scan in parallel, so the engine's critical
+        # path charges the busiest shard, not the total. Equal to the
+        # totals whenever stage1_shards == 1.
+        self.last_scan_shard_rows = 0
+        self.rows_scanned_max_shard = 0
         self._next_id = 0
         # freshness seam: the tiered cache fires this when a warm entry
         # re-enters HOT, so the FreshnessManager can re-arm its
@@ -89,6 +95,14 @@ class CortexCache:
     def rows(self) -> dict[int, int]:
         """se_id -> index row (row-aligned SoA: the store's own map)."""
         return self.soa.id2row
+
+    @property
+    def stage1_shards(self) -> int:
+        """Mesh shards the stage-1 index is partitioned over (DESIGN.md
+        §13); 1 = unsharded. Both tiers share the shard count (the warm
+        router is built from the same ClusterConfig)."""
+        rt = self.seri.index.router
+        return rt.n_shards if rt is not None else 1
 
     # ------------------------------------------------------------ lookup
 
@@ -118,6 +132,8 @@ class CortexCache:
         )
         self.last_scan_rows = self.seri.index.last_scanned
         self.rows_scanned += self.last_scan_rows
+        self.last_scan_shard_rows = self.seri.index.last_scanned_max_shard
+        self.rows_scanned_max_shard += self.last_scan_shard_rows
         out = []
         for se_ids, sims in found:
             # revalidating rows are KNOWN stale (change-feed notice,
@@ -315,6 +331,32 @@ class CortexCache:
             kw["staticity"] = st
             out.append(self.insert(q, emb, value, now=now, **kw))
         return out
+
+    def insert_block(self, queries: Sequence[str], q_embs: np.ndarray,
+                     values: Sequence[Any], *, now: float, cost: float,
+                     latency: float, size: int, staticity: int,
+                     ttl: float) -> np.ndarray:
+        """Bulk admission for large prefills (the million-entry scaling
+        sweeps): one index ``add_batch`` + one SoA ``add_block`` instead
+        of n scalar ``insert`` calls. No judge, no eviction — every
+        entry shares the scalar economics and the CALLER guarantees
+        capacity (index rows checked here; byte budget is the caller's).
+        Returns the assigned se_ids."""
+        n = len(queries)
+        if self.seri.index.capacity - len(self.seri.index) < n:
+            raise RuntimeError("insert_block needs free index capacity")
+        ids = np.arange(self._next_id, self._next_id + n, dtype=np.int64)
+        self._next_id += n
+        rows = self.seri.index.add_batch(ids, q_embs)
+        self.soa.add_block(
+            rows, ids, keys=queries, values=values, staticity=staticity,
+            cost=cost, latency=latency, size=size, created_at=now,
+            expires_at=now + ttl,
+        )
+        self.usage += size * n
+        self.stats.insertions += n
+        self.stats.bytes_stored = self.usage
+        return ids
 
     def peek_semantic(self, query: str, q_emb: np.ndarray,
                       now: float) -> Optional[SemanticElement]:

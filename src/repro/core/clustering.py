@@ -42,7 +42,8 @@ import numpy as np
 
 NEG = -3.0e38  # masked-score sentinel shared with the ANN kernels
 
-_ASSIGN_CHUNK = 8192  # rows per chunk in the full re-bucketing pass
+_ASSIGN_CHUNK = 8192   # rows per chunk in the full re-bucketing pass
+_MIGRATE_CHUNK = 4096  # rows per cross-shard migration chunk (rebalance)
 
 
 @dataclasses.dataclass
@@ -58,6 +59,12 @@ class ClusterConfig:
     batch_size: int = 1024      # mini-batch rows per k-means step
     iters: int = 4              # mini-batch steps per refresh
     seed: int = 0
+    # mesh shards the index is partitioned over (DESIGN.md §13): each
+    # shard owns a CONTIGUOUS cluster range and scans only its members.
+    # 1 = unsharded (every pre-§13 path unchanged). Sharding never
+    # touches training or routing — centroids, assignments, and the
+    # routed candidate set are shard-count invariant by construction.
+    n_shards: int = 1
 
 
 class ClusterRouter:
@@ -95,10 +102,72 @@ class ClusterRouter:
         # host-side sublinearity this module exists for
         self._member_lists: list[list[int]] = [[] for _ in range(c)]
         self._bucket_cache = None             # kernel-layout arrays
+        # ---- mesh-shard ownership (DESIGN.md §13) -------------------
+        # shard s owns the contiguous cluster range
+        # [shard_bounds[s], shard_bounds[s+1]); shard_of[ci] is the
+        # owner of cluster ci. Seeded with an even cluster split;
+        # refresh() rebalances the cut points to the member-count
+        # distribution (and counts the member rows that change owner).
+        s = max(1, int(self.cfg.n_shards))
+        self.n_shards = s
+        self.shard_bounds = (np.arange(s + 1, dtype=np.int64) * c) // s
+        self.shard_of = self._owners_from_bounds(self.shard_bounds)
+        self.rebalances = 0        # refreshes that moved ≥1 cluster
+        self.migrated_rows = 0     # member rows that changed shards
+        self.migration_chunks = 0  # ≤ _MIGRATE_CHUNK-row transfers
+        self._shard_cache = None   # kernel shard-layout arrays
 
     @property
     def ready(self) -> bool:
         return self.trained
+
+    # ------------------------------------------------ shard ownership
+
+    def _owners_from_bounds(self, bounds: np.ndarray) -> np.ndarray:
+        """Per-cluster owning shard from the cut-point prefix (repeated
+        cut points = empty shards, which are legal)."""
+        cs = np.arange(self.cfg.n_clusters)
+        owners = np.searchsorted(bounds, cs, side="right") - 1
+        return np.clip(owners, 0, self.n_shards - 1).astype(np.int32)
+
+    def _rebalance_shards(self, count_migration: bool) -> None:
+        """Re-cut cluster ownership to balance member counts across
+        shards (contiguous ranges only, so routing stays a range test).
+
+        Runs at the tail of every :meth:`refresh`, i.e. on the existing
+        mutation budget — no extra scheduling. Each cut point lands on
+        the member-count cumsum nearest to its ideal ``total·s/S``
+        target. Clusters whose owner changes migrate their member rows
+        in ≤ ``_MIGRATE_CHUNK``-row transfers; with the global SoA
+        store the migration is pure accounting (ownership metadata +
+        the counters the benchmarks report), mirroring what a
+        multi-host deployment would ship over the interconnect.
+        ``count_migration`` is False on the very first training pass —
+        initial placement is not a migration.
+        """
+        s = self.n_shards
+        if s <= 1:
+            return
+        c = self.cfg.n_clusters
+        csum = np.concatenate(([0], np.cumsum(self.counts)))
+        total = int(csum[-1])
+        targets = np.arange(1, s, dtype=np.float64) * (total / s)
+        cuts = np.searchsorted(csum[1:], targets, side="left") + 1
+        bounds = np.maximum.accumulate(np.concatenate(
+            ([0], np.minimum(cuts, c), [c])
+        )).astype(np.int64)
+        owners = self._owners_from_bounds(bounds)
+        if count_migration:
+            moved = self.counts[owners != self.shard_of]
+            moved = moved[moved > 0]
+            if len(moved):
+                self.rebalances += 1
+                self.migrated_rows += int(moved.sum())
+                self.migration_chunks += int(
+                    np.ceil(moved / _MIGRATE_CHUNK).sum())
+        self.shard_bounds = bounds
+        self.shard_of = owners
+        self._shard_cache = None
 
     # ------------------------------------------------- lifecycle hooks
 
@@ -118,6 +187,45 @@ class ClusterRouter:
                 self.refresh(index)
         elif self._muts >= self.cfg.refresh_every:
             self.refresh(index)
+
+    def note_add_batch(self, rows: np.ndarray, embs: np.ndarray,
+                       index) -> None:
+        """Vectorized :meth:`note_add` for a block of freshly-allocated
+        rows (bulk prefill). Only valid once trained — callers stay on
+        the scalar hook until training flips so the first refresh fires
+        at the same index size either way.
+
+        Mutation-for-mutation equivalent to the scalar hook: chunks
+        split at exactly ``refresh_every - _muts`` so refreshes fire at
+        the same mutation counts as a sequential add loop, and the
+        chunked (m, C) GEMM assignment matches the scalar GEMV argmax
+        on tie-free (non-degenerate) scores — the float-summation-order
+        caveat is the same one the chunked re-bucketing pass already
+        carries.
+        """
+        assert self.trained, "note_add_batch requires a trained router"
+        rows = np.asarray(rows, dtype=np.int64)
+        embs = np.asarray(embs, dtype=np.float32)
+        c = self.cfg.n_clusters
+        n, i = len(rows), 0
+        while i < n:
+            room = self.cfg.refresh_every - self._muts
+            take = min(n - i, max(1, room), _ASSIGN_CHUNK)
+            r, e = rows[i:i + take], embs[i:i + take]
+            a = np.argmax(e @ self.centroids.T, axis=1).astype(np.int32)
+            self.assign[r] = a
+            self.counts += np.bincount(a, minlength=c)
+            order = np.argsort(a, kind="stable")  # keeps rows in order
+            rs, asort = r[order], a[order]
+            bnd = np.searchsorted(asort, np.arange(c + 1))
+            for ci in np.unique(asort):
+                self._member_lists[ci].extend(
+                    int(x) for x in rs[bnd[ci]:bnd[ci + 1]])
+            self._bucket_cache = None
+            self._muts += take
+            i += take
+            if self._muts >= self.cfg.refresh_every:
+                self.refresh(index)
 
     def note_remove(self, rows: np.ndarray) -> None:
         """Unbucket freed rows (TTL purge, eviction, demotion)."""
@@ -185,6 +293,7 @@ class ClusterRouter:
         rows = np.flatnonzero(index.active)
         if len(rows) == 0:
             return
+        first = not self.trained
         if not self.trained:
             pick = self.rng.choice(
                 len(rows), size=min(self.cfg.n_clusters, len(rows)),
@@ -205,6 +314,7 @@ class ClusterRouter:
         self.trained = True
         self._muts = 0
         self.refreshes += 1
+        self._rebalance_shards(count_migration=not first)
 
     # ---------------------------------------------------------- routing
 
@@ -302,3 +412,50 @@ class ClusterRouter:
         payload = (emb, scales) if quant else emb
         self._bucket_cache = (payload, bucket_rows, bucket_valid)
         return self._bucket_cache
+
+    def kernel_shard_buckets(self, index, quant: bool = False):
+        """Shard-major re-slice of :meth:`kernel_buckets` for the
+        shard-parallel kernels (``kernels/ann_topk_sharded``): shard
+        s's slice holds its owned cluster range, zero-padded to the
+        widest ownership span so the (S, Cmax, cap[, D]) stacks can be
+        laid out across the mesh's shard axis.
+
+        Returns ``(payload, shard_rows, shard_valid, bounds)`` where
+        payload is (S, Cmax, cap, D) fp32 — or ((S, Cmax, cap, D) int8,
+        (S, Cmax, cap) fp32 scales) when ``quant`` — shard_rows /
+        shard_valid are (S, Cmax, cap), and bounds is the (S+1,) global
+        cluster-id prefix (shard s owns [bounds[s], bounds[s+1])).
+        Cached against the underlying bucket layout: any mutation or
+        rebalance invalidates it.
+        """
+        base = self.kernel_buckets(index, quant=quant)
+        if self._shard_cache is not None and self._shard_cache[0] is base:
+            return self._shard_cache[1]
+        payload, bucket_rows, bucket_valid = base
+        s, bounds = self.n_shards, self.shard_bounds
+        cmax = int(max(1, np.diff(bounds).max()))
+        cap = bucket_rows.shape[1]
+        shard_rows = np.full((s, cmax, cap), -1, np.int32)
+        shard_valid = np.zeros((s, cmax, cap), np.int32)
+        if quant:
+            emb_q, scales = payload
+            se = np.zeros((s, cmax, cap, self.dim), np.int8)
+            ss = np.zeros((s, cmax, cap), np.float32)
+        else:
+            se = np.zeros((s, cmax, cap, self.dim), np.float32)
+        for si in range(s):
+            lo, hi = int(bounds[si]), int(bounds[si + 1])
+            w = hi - lo
+            if w == 0:
+                continue
+            shard_rows[si, :w] = bucket_rows[lo:hi]
+            shard_valid[si, :w] = bucket_valid[lo:hi]
+            if quant:
+                se[si, :w] = emb_q[lo:hi]
+                ss[si, :w] = scales[lo:hi]
+            else:
+                se[si, :w] = payload[lo:hi]
+        out = ((se, ss) if quant else se, shard_rows, shard_valid,
+               bounds.astype(np.int64))
+        self._shard_cache = (base, out)
+        return out

@@ -108,6 +108,45 @@ class SEStore:
             self.by_intent.setdefault(intent, set()).add(se_id)
         return SemanticElement(self, row)
 
+    def add_block(self, rows, se_ids, *, keys, values, staticity, cost,
+                  latency, size, created_at, expires_at, freq=1,
+                  prefetched=False, version=0) -> None:
+        """Vectorized :meth:`add` for a uniform block (bulk prefill —
+        ``CortexCache.insert_block``): per-row ids/keys/values, scalar
+        economics broadcast, one fancy-indexed store per field instead
+        of n scalar calls. Freshness metadata takes the same defaults
+        scalar ``add`` derives (fetched_at = created_at, freq_at_fetch
+        = freq); intent/origin stay None (bulk fills carry no
+        change-feed subscription)."""
+        ra = np.asarray(rows, np.int64)
+        ids = np.asarray(se_ids, np.int64)
+        if self.active[ra].any():
+            raise ValueError("add_block would clobber live rows")
+        self.se_id[ra] = ids
+        self.freq[ra] = freq
+        self.size[ra] = size
+        self.last_access[ra] = created_at
+        self.created_at[ra] = created_at
+        self.expires_at[ra] = expires_at
+        self.cost[ra] = cost
+        self.latency[ra] = latency
+        self.staticity[ra] = staticity
+        self.version[ra] = version
+        self.fetched_at[ra] = created_at
+        self.freq_at_fetch[ra] = freq
+        self.revalidating[ra] = False
+        self.prefetched[ra] = prefetched
+        self.active[ra] = True
+        ko = np.empty(len(ra), object)
+        ko[:] = list(keys)
+        vo = np.empty(len(ra), object)
+        vo[:] = list(values)
+        self.key[ra] = ko
+        self.value[ra] = vo
+        self.intent[ra] = None
+        self.origin[ra] = None
+        self.id2row.update(zip(ids.tolist(), ra.tolist()))
+
     def snapshot_row(self, row: int) -> dict:
         """Full metadata copy of one live row as python scalars, keyed by
         the ``add`` kwarg names plus ``se_id`` — the tier-lifecycle

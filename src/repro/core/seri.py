@@ -51,9 +51,15 @@ class RowIndex:
         # for brute force; centroids + gathered members for the routed
         # scan) — the engine's scan-proportional latency term
         self.last_scanned = 0
+        # the busiest shard's share of last_scanned (DESIGN.md §13):
+        # shards scan in parallel, so the engine's critical path is the
+        # max-over-shards term, not the total. Equal to last_scanned
+        # for brute force and unsharded routing.
+        self.last_scanned_max_shard = 0
         # backends set these; the base dispatch only tests for presence
         self._kernel_fn = None
         self._ivf_kernel_fn = None
+        self._ivf_sharded_fn = None
         self._free = list(range(capacity - 1, -1, -1))
 
     def __len__(self) -> int:
@@ -91,6 +97,7 @@ class RowIndex:
             if info is not None:
                 return (*routed_scan(info), True)
         self.last_scanned = len(self)
+        self.last_scanned_max_shard = self.last_scanned
         return (*brute_scan(), False)
 
     def remove_rows(self, rows) -> None:
@@ -165,6 +172,44 @@ def topk_desc_stable(v: np.ndarray, k: int) -> np.ndarray:
     return sel[np.argsort(neg[sel], kind="stable")][:k]
 
 
+def sharded_topk_merge(s: np.ndarray, owners: np.ndarray, n_shards: int,
+                       k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Shard-parallel top-k over a (B, G) score matrix whose columns
+    are partitioned by ``owners`` (column → shard), merged to one
+    global (rows, vals) — bit-identical to ``topk_desc(s, k)``.
+
+    Each shard runs :func:`topk_desc` over its own column slice, then
+    the ≤ S·k finalists merge under the same total order topk_desc
+    uses: value descending, GLOBAL column ascending (``lexsort`` keys).
+    Every global winner is by definition inside its own shard's top-k
+    under that order, so the shard union always contains the global
+    top-k and the merge reproduces it exactly — including duplicate
+    scores straddling a shard boundary. This is the host-path model of
+    the shard_map + cross-shard ``lax.top_k`` kernel (DESIGN.md §13);
+    unlike :func:`topk_desc` it does NOT mutate ``s`` (the per-shard
+    column gathers are copies).
+    """
+    b, m = s.shape
+    k_eff = min(k, m)
+    ccols, cvals = [], []
+    for sh in range(n_shards):
+        cols = np.flatnonzero(owners == sh)
+        if not len(cols):
+            continue
+        lr, lv = topk_desc(s[:, cols], k)    # fancy-index copy of s
+        ccols.append(cols[lr])
+        cvals.append(lv)
+    cc = np.concatenate(ccols, axis=1)
+    cv = np.concatenate(cvals, axis=1)
+    rows = np.empty((b, k_eff), np.intp)
+    vals = np.empty((b, k_eff), s.dtype)
+    for i in range(b):
+        order = np.lexsort((cc[i], -cv[i]))[:k_eff]
+        rows[i] = cc[i][order]
+        vals[i] = cv[i][order]
+    return rows, vals
+
+
 class VectorIndex(RowIndex):
     """Fixed-capacity embedding store with free-list row management.
 
@@ -180,10 +225,12 @@ class VectorIndex(RowIndex):
         self.backend = backend
         self.emb = np.zeros((capacity, dim), np.float32)
         if backend == "kernel":
-            from repro.kernels.ops import ann_topk_ivf_jit, ann_topk_jit
+            from repro.kernels.ops import (
+                ann_topk_ivf_jit, ann_topk_ivf_sharded_jit, ann_topk_jit)
 
             self._kernel_fn = ann_topk_jit
             self._ivf_kernel_fn = ann_topk_ivf_jit
+            self._ivf_sharded_fn = ann_topk_ivf_sharded_jit
 
     def add(self, se_id: int, embedding: np.ndarray) -> int:
         row = self._alloc(se_id)
@@ -191,6 +238,47 @@ class VectorIndex(RowIndex):
         if self.router is not None:
             self.router.note_add(row, self.emb[row], self)
         return row
+
+    def add_batch(self, se_ids, embeddings) -> np.ndarray:
+        """Bulk add for large prefills (the million-entry sweeps): one
+        vectorized alloc+store per block instead of n scalar calls.
+
+        Stays on the scalar :meth:`add` path until the router trains —
+        the first refresh must trigger at the same index size as a
+        sequential loop would hit — then switches to bulk allocation +
+        ``note_add_batch`` (which itself splits at the router's exact
+        refresh points). Returns the allocated rows, ascending.
+        """
+        embs = np.asarray(embeddings, np.float32)
+        ids = np.asarray(se_ids, np.int64)
+        n = len(ids)
+        if len(self._free) < n:
+            raise RuntimeError("index full — evict first")
+        rows = np.empty(n, np.int64)
+        i = 0
+        while i < n and self.router is not None \
+                and not self.router.trained:
+            rows[i] = self.add(int(ids[i]), embs[i])
+            i += 1
+        rt = self.router
+        while i < n:
+            # allocate only up to the router's next refresh boundary: a
+            # refresh sees exactly the rows a sequential loop would have
+            # active (bulk-allocating ahead would leak not-yet-noted
+            # rows into the training sample and re-bucketing pass)
+            take = n - i
+            if rt is not None:
+                take = min(take, max(1, rt.cfg.refresh_every - rt._muts))
+            ra = np.array([self._free.pop() for _ in range(take)],
+                          np.int64)
+            self.active[ra] = True
+            self.row_se[ra] = ids[i:i + take]
+            self.emb[ra] = embs[i:i + take]
+            rows[i:i + take] = ra
+            if rt is not None:
+                rt.note_add_batch(ra, self.emb[ra], self)
+            i += take
+        return rows
 
     def _clear_rows(self, ra: np.ndarray) -> None:
         self.emb[ra] = 0.0
@@ -213,8 +301,22 @@ class VectorIndex(RowIndex):
         nprobe=all the scored matrix is exactly the brute matrix
         restricted to active rows — same values, same tie order."""
         g_rows, allowed, self.last_scanned = routed
+        rt = self.router
         s = np.where(allowed, q @ self.emb[g_rows].T, -1.0)
-        lrows, sims = topk_desc(s, k)                          # (B, k)
+        if rt.n_shards > 1:
+            # shard-parallel selection over the SAME score matrix: each
+            # shard top-k's its owned member columns, finalists merge
+            # under topk_desc's (value desc, row asc) order — so the
+            # result is bit-identical to the unsharded path and the
+            # float-reduction tolerance across shard counts is zero
+            owners = rt.shard_of[rt.assign[g_rows]]
+            n_cent = self.last_scanned - len(g_rows)
+            self.last_scanned_max_shard = n_cent + int(
+                np.bincount(owners, minlength=rt.n_shards).max())
+            lrows, sims = sharded_topk_merge(s, owners, rt.n_shards, k)
+        else:
+            self.last_scanned_max_shard = self.last_scanned
+            lrows, sims = topk_desc(s, k)                      # (B, k)
         return g_rows[lrows], sims
 
     def _search_routed_kernel(self, q: np.ndarray, k: int):
@@ -223,6 +325,8 @@ class VectorIndex(RowIndex):
         route()/gather happens at all — rows-scanned accounting derives
         from the kernel's own cluster selection."""
         rt = self.router
+        if rt.n_shards > 1 and self._ivf_sharded_fn is not None:
+            return self._search_routed_kernel_sharded(q, k)
         layout, bucket_rows, bucket_valid = rt.kernel_buckets(self)
         nprobe = rt.cfg.n_clusters if rt.cfg.nprobe is None \
             else min(rt.cfg.nprobe, rt.cfg.n_clusters)
@@ -233,6 +337,33 @@ class VectorIndex(RowIndex):
         )
         probed = np.unique(np.asarray(sel)[np.asarray(en) > 0])
         self.last_scanned = int(live.sum() + rt.counts[probed].sum())
+        self.last_scanned_max_shard = self.last_scanned
+        return np.asarray(rows), np.asarray(sims)
+
+    def _search_routed_kernel_sharded(self, q: np.ndarray, k: int):
+        """Shard-parallel Pallas routed scan (DESIGN.md §13): routing
+        stays global (centroid top-nprobe inside the jit wrapper); each
+        mesh shard scans only its owned probes under ``shard_map`` and
+        the S·nprobe·k finalists merge with one cross-shard
+        ``lax.top_k``. Scan accounting splits the probed members by
+        owner so the engine can charge max-over-shards."""
+        rt = self.router
+        layout, shard_rows, shard_valid, bounds = \
+            rt.kernel_shard_buckets(self)
+        nprobe = rt.cfg.n_clusters if rt.cfg.nprobe is None \
+            else min(rt.cfg.nprobe, rt.cfg.n_clusters)
+        live = rt.counts > 0
+        sims, rows, sel, en = self._ivf_sharded_fn(
+            rt.centroids, live.astype(np.int32), layout,
+            shard_rows, shard_valid, bounds, q, nprobe, k,
+        )
+        probed = np.unique(np.asarray(sel)[np.asarray(en) > 0])
+        n_cent = int(live.sum())
+        per_shard = np.bincount(
+            rt.shard_of[probed], weights=rt.counts[probed],
+            minlength=rt.n_shards)
+        self.last_scanned = n_cent + int(rt.counts[probed].sum())
+        self.last_scanned_max_shard = n_cent + int(per_shard.max())
         return np.asarray(rows), np.asarray(sims)
 
     def _search_brute(self, q: np.ndarray, k: int):
@@ -258,6 +389,7 @@ class VectorIndex(RowIndex):
         b = q.shape[0]
         if len(self) == 0:
             self.last_scanned = 0
+            self.last_scanned_max_shard = 0
             empty = ([], np.zeros(0, np.float32))
             return [empty] * b
         q = np.asarray(q, np.float32)

@@ -43,8 +43,8 @@ from repro.core.cache import CortexCache
 from repro.core.clustering import ClusterConfig, ClusterRouter
 from repro.core.se_store import SEStore
 from repro.core.semantic_element import SemanticElement
-from repro.core.seri import (RowIndex, Seri, VectorIndex, topk_desc,
-                             topk_desc_stable)
+from repro.core.seri import (RowIndex, Seri, VectorIndex, sharded_topk_merge,
+                             topk_desc, topk_desc_stable)
 
 NEG = -3.0e38  # matches kernels/ann_topk_quant.NEG (masked-row sentinel)
 
@@ -103,10 +103,12 @@ class QuantIndex(RowIndex):
         self.scale = np.zeros(capacity, np.float32)
         if backend == "kernel":
             from repro.kernels.ops import (ann_topk_ivf_quant_jit,
+                                           ann_topk_ivf_quant_sharded_jit,
                                            ann_topk_quant_jit)
 
             self._kernel_fn = ann_topk_quant_jit
             self._ivf_kernel_fn = ann_topk_ivf_quant_jit
+            self._ivf_sharded_fn = ann_topk_ivf_quant_sharded_jit
 
     def add(self, se_id: int, embedding: np.ndarray) -> int:
         row = self._alloc(se_id)
@@ -151,12 +153,24 @@ class QuantIndex(RowIndex):
         at nprobe=all the scored matrix is the brute matrix restricted
         to active rows (same values, same tie order)."""
         g_rows, allowed, self.last_scanned = routed
+        rt = self.router
         s = (qq.astype(np.int32) @ self._emb_i32[g_rows].T
              ).astype(np.float32)
         s = s * self.scale[g_rows][None, :]
         s = s * qs[:, None]
         s = np.where(allowed, s, NEG)
-        lrows, vals = topk_desc(s, r)                         # (B, r)
+        if rt.n_shards > 1:
+            # same shard-parallel selection as the hot index — the
+            # score matrix is identical, so the merge is bit-identical
+            # to the unsharded coarse pass (DESIGN.md §13)
+            owners = rt.shard_of[rt.assign[g_rows]]
+            n_cent = self.last_scanned - len(g_rows)
+            self.last_scanned_max_shard = n_cent + int(
+                np.bincount(owners, minlength=rt.n_shards).max())
+            lrows, vals = sharded_topk_merge(s, owners, rt.n_shards, r)
+        else:
+            self.last_scanned_max_shard = self.last_scanned
+            lrows, vals = topk_desc(s, r)                     # (B, r)
         return g_rows[lrows], vals
 
     def _coarse_routed_kernel(self, q, qq, qs, r: int):
@@ -165,6 +179,8 @@ class QuantIndex(RowIndex):
         route()/gather; rows-scanned derives from the kernel's own
         cluster selection."""
         rt = self.router
+        if rt.n_shards > 1 and self._ivf_sharded_fn is not None:
+            return self._coarse_routed_kernel_sharded(q, qq, qs, r)
         (bq, bscale), bucket_rows, bucket_valid = \
             rt.kernel_buckets(self, quant=True)
         nprobe = rt.cfg.n_clusters if rt.cfg.nprobe is None \
@@ -176,6 +192,31 @@ class QuantIndex(RowIndex):
         )
         probed = np.unique(np.asarray(sel)[np.asarray(en) > 0])
         self.last_scanned = int(live.sum() + rt.counts[probed].sum())
+        self.last_scanned_max_shard = self.last_scanned
+        return np.asarray(rows), np.asarray(vals)
+
+    def _coarse_routed_kernel_sharded(self, q, qq, qs, r: int):
+        """Shard-parallel quantized coarse scan — the int8 sibling of
+        ``VectorIndex._search_routed_kernel_sharded`` (DESIGN.md §13):
+        global routing, per-shard Pallas scans under ``shard_map``, one
+        cross-shard ``lax.top_k`` merge."""
+        rt = self.router
+        (bq, bscale), shard_rows, shard_valid, bounds = \
+            rt.kernel_shard_buckets(self, quant=True)
+        nprobe = rt.cfg.n_clusters if rt.cfg.nprobe is None \
+            else min(rt.cfg.nprobe, rt.cfg.n_clusters)
+        live = rt.counts > 0
+        vals, rows, sel, en = self._ivf_sharded_fn(
+            rt.centroids, live.astype(np.int32), bq, bscale,
+            shard_rows, shard_valid, bounds, q, qq, qs, nprobe, r,
+        )
+        probed = np.unique(np.asarray(sel)[np.asarray(en) > 0])
+        n_cent = int(live.sum())
+        per_shard = np.bincount(
+            rt.shard_of[probed], weights=rt.counts[probed],
+            minlength=rt.n_shards)
+        self.last_scanned = n_cent + int(rt.counts[probed].sum())
+        self.last_scanned_max_shard = n_cent + int(per_shard.max())
         return np.asarray(rows), np.asarray(vals)
 
     def _coarse_brute(self, qq, qs, r: int):
@@ -199,6 +240,7 @@ class QuantIndex(RowIndex):
         b = q.shape[0]
         if len(self) == 0:
             self.last_scanned = 0
+            self.last_scanned_max_shard = 0
             empty = ([], np.zeros(0, np.float32))
             return [empty] * b
         q = np.asarray(q, np.float32)
@@ -559,9 +601,14 @@ class TieredCache(CortexCache):
                 q_embs[warm_qi], self.seri.top_k, self.seri.tau_sim, now
             )
             # the warm coarse scan's rows join the pass's scan-
-            # proportional latency term (DESIGN.md §12)
+            # proportional latency term (DESIGN.md §12); its busiest
+            # shard joins the max-over-shards critical path (§13)
             self.last_scan_rows += self.warm.index.last_scanned
             self.rows_scanned += self.warm.index.last_scanned
+            self.last_scan_shard_rows += \
+                self.warm.index.last_scanned_max_shard
+            self.rows_scanned_max_shard += \
+                self.warm.index.last_scanned_max_shard
             for bi, (wc, wsims) in zip(warm_qi, wfound):
                 # the consult FACT (flowing back through
                 # stage1_batch_flagged) feeds the engine's per-tier

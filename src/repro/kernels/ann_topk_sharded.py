@@ -1,0 +1,154 @@
+"""Shard-parallel routed scans over the IVF Pallas kernels (DESIGN.md §13).
+
+Sharding lives ABOVE the kernel: ``ann_topk_ivf`` / ``ann_topk_ivf_quant``
+run unmodified, once per mesh shard. ``sel`` carries GLOBAL cluster ids
+from the shared router; each shard masks the probes down to the
+contiguous cluster range it owns (``lo ≤ sel < hi``), translates them to
+its local bucket space, scans its ``(Cmax, cap[, D])`` slice, and
+translates winning bucket slots back to GLOBAL index rows. Probes a
+shard does not own run disabled (the kernel's existing ``enabled=0``
+path), so every shard launches the same grid — no data-dependent shapes.
+
+Two execution modes produce identical ``(S, B, nprobe, k)`` stacks:
+
+  * ``shard_map`` over a 1-D ``("shards",)`` device mesh
+    (``launch/mesh.make_shard_mesh``) — one program per device, the
+    bucket slices land device-local;
+  * an unrolled host loop for hosts with fewer devices than shards
+    (``jax.device_count() < S``) — same math, same outputs.
+
+``kernels/ops.py`` merges the stacks with one cross-shard
+``jax.lax.top_k`` (the ``_merge_shards`` step).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.ann_topk_ivf import NEG, ann_topk_ivf, ann_topk_ivf_quant
+
+__all__ = ["ann_topk_ivf_sharded", "ann_topk_ivf_quant_sharded",
+           "mesh_available", "NEG"]
+
+
+def mesh_available(n_shards: int) -> bool:
+    """True when the host can lay one cache shard per device (the CI
+    gate simulates 8 CPU devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    return jax.device_count() >= n_shards
+
+
+def _own_probes(sel, en, lo, hi, cmax):
+    """Mask ``sel`` down to one shard's owned cluster range and
+    translate to its local bucket ids. Non-owned probes come back
+    disabled with a clipped (in-range, never scanned) local id."""
+    own = (sel >= lo) & (sel < hi)
+    loc = jnp.clip(sel - lo, 0, cmax - 1).astype(jnp.int32)
+    return loc, (en * own).astype(jnp.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_fn(n_shards: int, k: int, interpret: bool, quant: bool):
+    """Build (once per config) the jitted shard_map program: sharded
+    operands carry a leading length-1 shard axis inside the body."""
+    from repro.launch.mesh import make_shard_mesh
+    from repro.nn.sharding import shard_map_compat
+
+    mesh = make_shard_mesh(n_shards)
+    if quant:
+        def body(bkt, bsc, vld, rws, lo, hi, qq, qs, sel, en):
+            loc, en_s = _own_probes(sel, en, lo[0, 0], hi[0, 0],
+                                    bkt.shape[1])
+            vals, slots = ann_topk_ivf_quant(
+                loc, en_s, qq, qs, bkt[0], bsc[0], vld[0], k,
+                interpret=interpret,
+            )
+            rows = jnp.where(vals > NEG / 2,
+                             rws[0][loc[:, :, None], slots], -1)
+            return vals[None], rows[None]
+
+        in_specs = (P("shards"),) * 6 + (P(), P(), P(), P())
+    else:
+        def body(bkt, vld, rws, lo, hi, q, sel, en):
+            loc, en_s = _own_probes(sel, en, lo[0, 0], hi[0, 0],
+                                    bkt.shape[1])
+            vals, slots = ann_topk_ivf(loc, en_s, q, bkt[0], vld[0], k,
+                                       interpret=interpret)
+            rows = jnp.where(vals > NEG / 2,
+                             rws[0][loc[:, :, None], slots], -1)
+            return vals[None], rows[None]
+
+        in_specs = (P("shards"),) * 5 + (P(), P(), P())
+    fn = shard_map_compat(body, mesh=mesh, in_specs=in_specs,
+                          out_specs=(P("shards"), P("shards")),
+                          axis_names={"shards"})
+    return jax.jit(fn)
+
+
+def ann_topk_ivf_sharded(sel, enabled, q, shard_buckets, shard_valid,
+                         shard_rows, bounds, k: int = 4, *,
+                         interpret: bool = True):
+    """fp32 shard-parallel routed scan. Returns ``(vals, rows)`` each
+    ``(S, B, nprobe, k)``; rows are GLOBAL index rows, -1 where masked.
+    ``bounds`` is the router's (S+1,) cluster-ownership prefix."""
+    s = shard_buckets.shape[0]
+    if s > 1 and mesh_available(s):
+        fn = _mesh_fn(s, k, interpret, False)
+        lo = jnp.asarray(bounds[:-1], jnp.int32).reshape(s, 1)
+        hi = jnp.asarray(bounds[1:], jnp.int32).reshape(s, 1)
+        return fn(jnp.asarray(shard_buckets), jnp.asarray(shard_valid),
+                  jnp.asarray(shard_rows), lo, hi, jnp.asarray(q),
+                  jnp.asarray(sel), jnp.asarray(enabled))
+    sel, en, q = jnp.asarray(sel), jnp.asarray(enabled), jnp.asarray(q)
+    cmax = shard_buckets.shape[1]
+    vs, rs = [], []
+    for si in range(s):
+        loc, en_s = _own_probes(sel, en, int(bounds[si]),
+                                int(bounds[si + 1]), cmax)
+        vals, slots = ann_topk_ivf(
+            loc, en_s, q, jnp.asarray(shard_buckets[si]),
+            jnp.asarray(shard_valid[si]), k, interpret=interpret,
+        )
+        rs.append(jnp.where(
+            vals > NEG / 2,
+            jnp.asarray(shard_rows[si])[loc[:, :, None], slots], -1))
+        vs.append(vals)
+    return jnp.stack(vs), jnp.stack(rs)
+
+
+def ann_topk_ivf_quant_sharded(sel, enabled, qq, q_scales, shard_bq,
+                               shard_scale, shard_valid, shard_rows,
+                               bounds, k: int = 16, *,
+                               interpret: bool = True):
+    """int8 shard-parallel routed coarse scan — the quantized sibling of
+    :func:`ann_topk_ivf_sharded` (same ownership masking, same global
+    row translation)."""
+    s = shard_bq.shape[0]
+    if s > 1 and mesh_available(s):
+        fn = _mesh_fn(s, k, interpret, True)
+        lo = jnp.asarray(bounds[:-1], jnp.int32).reshape(s, 1)
+        hi = jnp.asarray(bounds[1:], jnp.int32).reshape(s, 1)
+        return fn(jnp.asarray(shard_bq), jnp.asarray(shard_scale),
+                  jnp.asarray(shard_valid), jnp.asarray(shard_rows),
+                  lo, hi, jnp.asarray(qq), jnp.asarray(q_scales),
+                  jnp.asarray(sel), jnp.asarray(enabled))
+    sel, en = jnp.asarray(sel), jnp.asarray(enabled)
+    qq, q_scales = jnp.asarray(qq), jnp.asarray(q_scales)
+    cmax = shard_bq.shape[1]
+    vs, rs = [], []
+    for si in range(s):
+        loc, en_s = _own_probes(sel, en, int(bounds[si]),
+                                int(bounds[si + 1]), cmax)
+        vals, slots = ann_topk_ivf_quant(
+            loc, en_s, qq, q_scales, jnp.asarray(shard_bq[si]),
+            jnp.asarray(shard_scale[si]), jnp.asarray(shard_valid[si]),
+            k, interpret=interpret,
+        )
+        rs.append(jnp.where(
+            vals > NEG / 2,
+            jnp.asarray(shard_rows[si])[loc[:, :, None], slots], -1))
+        vs.append(vals)
+    return jnp.stack(vs), jnp.stack(rs)

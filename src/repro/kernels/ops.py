@@ -13,13 +13,17 @@ import jax.numpy as jnp
 from repro.kernels.ann_topk import ann_topk
 from repro.kernels.ann_topk_ivf import NEG, ann_topk_ivf, ann_topk_ivf_quant
 from repro.kernels.ann_topk_quant import ann_topk_quant
+from repro.kernels.ann_topk_sharded import (ann_topk_ivf_quant_sharded,
+                                            ann_topk_ivf_sharded)
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention_fwd
 
 __all__ = ["ann_topk", "ann_topk_quant", "ann_topk_ivf",
-           "ann_topk_ivf_quant", "flash_attention_fwd",
+           "ann_topk_ivf_quant", "ann_topk_ivf_sharded",
+           "ann_topk_ivf_quant_sharded", "flash_attention_fwd",
            "decode_attention", "ann_topk_jit", "ann_topk_quant_jit",
-           "ann_topk_ivf_jit", "ann_topk_ivf_quant_jit"]
+           "ann_topk_ivf_jit", "ann_topk_ivf_quant_jit",
+           "ann_topk_ivf_sharded_jit", "ann_topk_ivf_quant_sharded_jit"]
 
 
 _B_ALIGN = 8  # fp32 sublane count: pad the query block to aligned shapes
@@ -116,6 +120,66 @@ def ann_topk_ivf_quant_jit(centroids, live, buckets_q, bucket_scale,
         jnp.asarray(bucket_scale), jnp.asarray(bucket_valid), k,
     )
     top_v, top_r = _merge_probes(vals, slots, sel, bucket_rows, k)
+    return top_v[:b], top_r[:b], sel[:b], enabled[:b]
+
+
+def _merge_shards(vals, rows, k: int):
+    """(S, B, nprobe, k) shard stacks -> (B, kk) finalists via ONE
+    cross-shard ``lax.top_k`` — the §13 merge step. Rows already carry
+    GLOBAL index ids (-1 where masked), so no translation here. Exact-
+    score ties across shards resolve in shard-major flat order — the
+    same class of kernel-backend tie caveat as ``_merge_probes``'s
+    between-bucket order (the numpy sharded path does not share it)."""
+    b = vals.shape[1]
+    v = jnp.moveaxis(jnp.asarray(vals), 0, 1).reshape(b, -1)
+    r = jnp.moveaxis(jnp.asarray(rows), 0, 1).reshape(b, -1)
+    kk = min(k, v.shape[1])
+    top_v, pos = jax.lax.top_k(v, kk)
+    top_r = jnp.take_along_axis(r, pos, axis=1)
+    return top_v, top_r
+
+
+def ann_topk_ivf_sharded_jit(centroids, live, shard_buckets, shard_rows,
+                             shard_valid, bounds, q, nprobe: int,
+                             k: int = 4):
+    """Sharded clustered VectorIndex backend adapter (DESIGN.md §13):
+    routing stays GLOBAL (same ``_route`` as the unsharded wrapper, so
+    the probed cluster set is shard-count invariant); the scan fans out
+    per shard (``kernels/ann_topk_sharded``) and the S·nprobe·k
+    finalists merge with one cross-shard ``lax.top_k``. Returns
+    ``(vals, rows, sel, enabled)`` like ``ann_topk_ivf_jit``."""
+    b = q.shape[0]
+    pad = (-b) % _B_ALIGN
+    q = jnp.asarray(q)
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+    sel, enabled = _route(centroids, live, q, nprobe)
+    vals, rows = ann_topk_ivf_sharded(sel, enabled, q, shard_buckets,
+                                      shard_valid, shard_rows, bounds, k)
+    top_v, top_r = _merge_shards(vals, rows, k)
+    return top_v[:b], top_r[:b], sel[:b], enabled[:b]
+
+
+def ann_topk_ivf_quant_sharded_jit(centroids, live, shard_bq, shard_scale,
+                                   shard_rows, shard_valid, bounds, q, qq,
+                                   q_scales, nprobe: int, k: int = 16):
+    """Sharded clustered QuantIndex backend adapter (coarse phase only):
+    fp32 global routing, int8 per-shard scans, one cross-shard merge —
+    mirrors ``ann_topk_ivf_quant_jit`` exactly as
+    ``ann_topk_ivf_sharded_jit`` mirrors ``ann_topk_ivf_jit``."""
+    b = qq.shape[0]
+    pad = (-b) % _B_ALIGN
+    q, qq, q_scales = jnp.asarray(q), jnp.asarray(qq), jnp.asarray(q_scales)
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+        qq = jnp.pad(qq, ((0, pad), (0, 0)))
+        q_scales = jnp.pad(q_scales, (0, pad))
+    sel, enabled = _route(centroids, live, q, nprobe)
+    vals, rows = ann_topk_ivf_quant_sharded(
+        sel, enabled, qq, q_scales, shard_bq, shard_scale, shard_valid,
+        shard_rows, bounds, k,
+    )
+    top_v, top_r = _merge_shards(vals, rows, k)
     return top_v[:b], top_r[:b], sel[:b], enabled[:b]
 
 

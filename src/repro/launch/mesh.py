@@ -16,6 +16,24 @@ except ImportError:  # jax < 0.5: explicit axis types don't exist yet
     AxisType = None
 
 
+def make_shard_mesh(n_shards: int):
+    """1-D mesh over the first ``n_shards`` local devices, axis
+    ``("shards",)`` — the stage-1 cache partition axis (DESIGN.md §13).
+    Distinct from the model mesh: cache shards are data-parallel scan
+    slices keyed by cluster ownership, not model-parallel weight
+    shards. CI simulates 8 CPU devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
+    from jax.sharding import Mesh
+    import numpy as np
+
+    devs = jax.devices()
+    if len(devs) < n_shards:
+        raise ValueError(
+            f"mesh needs {n_shards} devices, host has {len(devs)}"
+        )
+    return Mesh(np.array(devs[:n_shards]), ("shards",))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -74,6 +74,8 @@ def run_once(
     n_clusters: int = 64,
     nprobe: int | None = 8,
     t_cache_per_row: float = 0.0,
+    shards: int = 1,
+    t_shard_merge: float = 0.0,
     seed: int = 0,
 ) -> dict:
     # churn_period switches the ground truth to a MutableWorld whose
@@ -95,10 +97,13 @@ def run_once(
     if mode in ("cortex", "cortex-nojudge"):
         judge = OracleJudge(world, accuracy=judge_acc, seed=seed + 2)
         # clustered (IVF) stage-1 routing, DESIGN.md §12; nprobe=None
-        # probes every cluster (the brute-force-parity mode)
+        # probes every cluster (the brute-force-parity mode). shards>1
+        # (the §13 mesh partition) requires the router, so it implies
+        # --cluster on its own.
         ccfg = ClusterConfig(
             n_clusters=n_clusters, nprobe=nprobe, seed=seed + 5,
-        ) if cluster else None
+            n_shards=max(1, shards),
+        ) if (cluster or shards > 1) else None
         if warm_frac:
             # tiered storage at EQUAL total bytes: the warm slice comes
             # OUT of the same budget, it is never additional capacity
@@ -147,6 +152,7 @@ def run_once(
             warmup_frac=warmup_frac,
             t_cache_warm=warm_access_latency,
             t_cache_per_row=t_cache_per_row,
+            t_shard_merge=t_shard_merge,
             seed=seed + 4,
         ),
         clock=clock,
@@ -178,6 +184,13 @@ def main(argv=None):
     ap.add_argument("--t-cache-per-row", type=float, default=0.0,
                     help="stage-1 latency per row scanned (the scan-"
                          "proportional model; 0 = legacy flat cost)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="mesh-shard the stage-1 index across this many "
+                         "cluster-ownership shards (DESIGN.md §13; "
+                         "implies --cluster)")
+    ap.add_argument("--t-shard-merge", type=float, default=0.0,
+                    help="cross-shard top-k merge cost per stage-1 pass "
+                         "(only charged when --shards > 1)")
     ap.add_argument("--mode", default="cortex",
                     choices=["vanilla", "exact", "cortex", "cortex-nojudge"])
     ap.add_argument("--n-requests", type=int, default=800)
@@ -212,6 +225,8 @@ def main(argv=None):
         n_clusters=args.n_clusters,
         nprobe=args.nprobe or None,
         t_cache_per_row=args.t_cache_per_row,
+        shards=args.shards,
+        t_shard_merge=args.t_shard_merge,
         seed=args.seed,
     )
     print(json.dumps(s, indent=2, default=float))

@@ -56,6 +56,11 @@ class EngineConfig:
                                         # DESIGN.md §12) shows up in
                                         # end-to-end latency. 0 = legacy
                                         # flat-cost model.
+    t_shard_merge: float = 0.0          # cross-shard top-k merge cost
+                                        # per stage-1 pass (§13): added
+                                        # to the scan term only when the
+                                        # cache's stage-1 index is
+                                        # partitioned (stage1_shards>1)
     judge_timeout: float = 0.25         # deferred validation ⇒ miss
     judge_batch_max: int = 8            # judge micro-batch size cap (§4.4)
     judge_batch_marginal: float = 0.5   # marginal prefill cost per co-batched req
@@ -337,8 +342,15 @@ class Engine:
         # rows takes per_row · rows_scanned longer, during which the
         # host is busy (next pass waits) and this batch's resolutions
         # are deferred. per_row = 0 reproduces the legacy flat model
-        # exactly — same events, same order.
-        t_scan = self.cfg.t_cache_per_row * self.cache.last_scan_rows
+        # exactly — same events, same order. Under a sharded stage 1
+        # (§13) the shards stream in parallel, so the pass charges the
+        # BUSIEST shard's rows plus one cross-shard merge term; at
+        # stage1_shards == 1 the expression reduces to the §12 model
+        # verbatim (last_scan_shard_rows == last_scan_rows, no merge).
+        shards = getattr(self.cache, "stage1_shards", 1)
+        t_scan = self.cfg.t_cache_per_row * self.cache.last_scan_shard_rows
+        if shards > 1:
+            t_scan += self.cfg.t_shard_merge
         self._stage1_busy_until = now + t_scan
         if self._stage1_pending:  # next pass opens as the scan retires
             self._stage1_open = now + t_scan
@@ -812,6 +824,28 @@ class Engine:
                     else 0.0
                 ),
             )
+            shards = getattr(self.cache, "stage1_shards", 1)
+            if shards > 1:
+                # mesh-sharded stage 1 (§13). Keyed OFF when unsharded
+                # so pre-§13 summaries (and the bit-identity gates that
+                # compare them) are byte-identical.
+                rt = self.cache.seri.index.router
+                reb, mig, chunks = (rt.rebalances, rt.migrated_rows,
+                                    rt.migration_chunks)
+                wix = getattr(self.cache, "warm", None)
+                if wix is not None and wix.index.router is not None:
+                    wrt = wix.index.router
+                    reb += wrt.rebalances
+                    mig += wrt.migrated_rows
+                    chunks += wrt.migration_chunks
+                out.update(
+                    stage1_shards=shards,
+                    rows_scanned_max_shard=(
+                        self.cache.rows_scanned_max_shard),
+                    shard_rebalances=reb,
+                    shard_migrated_rows=mig,
+                    shard_migration_chunks=chunks,
+                )
             # freshness accounting (DESIGN.md §11): every cache-served
             # value is version-checked, so these are exact, not sampled.
             # stale_hit_rate is per SERVED value (local hits + federated

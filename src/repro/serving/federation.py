@@ -489,6 +489,14 @@ class FederationRunner:
                 m.stats.refreshes for m in self._managers()
             )),
         }
+        shards = max(
+            (getattr(c, "stage1_shards", 1) for c in self._caches()),
+            default=1,
+        )
+        if shards > 1:
+            # mesh-sharded stage 1 (DESIGN.md §13) — keyed off when
+            # unsharded so pre-§13 aggregate summaries stay identical
+            agg["stage1_shards"] = shards
         return {"aggregate": agg, "regions": per_region}
 
 

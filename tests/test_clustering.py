@@ -367,3 +367,45 @@ def test_routed_kernel_duplicate_tie_order_matches_numpy(rng):
     ids_k, sims_k = kr_ix.search(dup, k, 0.0)
     assert ids_n == ids_k
     np.testing.assert_allclose(sims_n, sims_k, atol=2e-6)
+
+
+def test_cross_shard_topk_merge_boundary_ties():
+    """§13 cross-shard merge tie-breaking: every row scores EXACTLY 0.5
+    against the query (first component 0.5, rest on orthogonal axes —
+    bitwise-equal fp32 dots, no tolerance). The k-boundary tie group
+    therefore spans shard ownership, and the sharded merge must pick
+    the same lowest-row winners as the single-shard path and brute
+    force — rows [0, 1, 2, 3], interleaved across the duplicate groups
+    and, at S>1, across shard boundaries."""
+    dim, n, k = 16, 64, 4
+    embs = np.zeros((n, dim), np.float32)
+    for i in range(n):
+        # row i joins duplicate group i%4: 0.5·e0 + sqrt(.75)·e_{1+g}
+        embs[i, 0] = 0.5
+        embs[i, 1 + i % 4] = np.float32(np.sqrt(0.75))
+    q = np.zeros(dim, np.float32)
+    q[0] = 1.0
+
+    def build(shards):
+        cfg = ClusterConfig(n_clusters=4, nprobe=None, min_train=8,
+                            seed=5, n_shards=shards) if shards else None
+        router = ClusterRouter(n + 32, dim, cfg) if cfg else None
+        ix = VectorIndex(n + 32, dim, router=router)
+        for i in range(n):
+            ix.add(i, embs[i])
+        return ix
+
+    ids_b, sims_b = build(0).search(q, k, 0.0)
+    assert ids_b == [0, 1, 2, 3]
+    assert all(s == np.float32(0.5) for s in sims_b)
+    for shards in (1, 2, 8):       # 8 > n_clusters: empty shards legal
+        ix = build(shards)
+        rt = ix.router
+        assert rt.trained
+        ids, sims = ix.search(q, k, 0.0)
+        assert ids == ids_b
+        assert np.array_equal(sims, sims_b)
+        if shards > 1:
+            # the winning tie group really straddles a shard boundary
+            owners = rt.shard_of[rt.assign[ids]]
+            assert len(set(owners.tolist())) >= 2
