@@ -22,7 +22,7 @@ ROWS: list[dict] = []
 
 
 def emit(name: str, us_per_call: float, *, seed=None, shards=None,
-         nprobe=None, **derived):
+         nprobe=None, judge_model=None, band=None, **derived):
     """One benchmark row. ``seed`` lands as a first-class field in the
     --json BENCH_*.json rows (alongside the git_sha and device count
     benchmarks/run.py stamps at write time) so cross-PR trajectory
@@ -30,13 +30,20 @@ def emit(name: str, us_per_call: float, *, seed=None, shards=None,
     seed-parameterized. ``shards``/``nprobe`` are likewise first-class
     (None = not shard/probe-parameterized): the mesh-sharded stage-1
     rows (DESIGN.md §13) must be groupable by shard/mesh config without
-    parsing the free-form derived dict."""
-    first = {k: v for k, v in (("shards", shards), ("nprobe", nprobe))
+    parsing the free-form derived dict. ``judge_model``/``band`` do the
+    same for the judge-colocation frontier rows (§14): the throughput-
+    vs-judge-accuracy frontier must be reconstructable from the
+    artifacts alone — judge_model names the stage-2 cost/compute config
+    (e.g. "oracle+flops:d128"), band is the admission-band width."""
+    first = {k: v for k, v in (("shards", shards), ("nprobe", nprobe),
+                               ("judge_model", judge_model),
+                               ("band", band))
              if v is not None}
     kv = " ".join(f"{k}={v}" for k, v in {**first, **derived}.items())
     print(f"{name},{us_per_call:.1f},{kv}")
     ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
                  "seed": seed, "shards": shards, "nprobe": nprobe,
+                 "judge_model": judge_model, "band": band,
                  "derived": derived})
 
 

@@ -848,3 +848,112 @@ def recalibration_overhead():
          recal_thpt=round(recal["throughput_rps"], 3),
          thpt_drop=round(drop, 4),
          em_base=round(base["em"], 3), em_recal=round(recal["em"], 3))
+
+
+def judge_colocation(smoke=False):
+    """§14 / paper Fig 6: throughput-vs-judge-accuracy frontier for the
+    co-located JudgePipeline at matched GPU budget.
+
+    Five gates (SystemExit on regression):
+      1. width-0 admission band reproduces the judge-everything engine
+         event-for-event (bit-identical summary at the same seed);
+      2. an armed band strictly reduces judge calls at equal-or-better
+         info accuracy;
+      3. co-located serving (1 chip, shared lanes) sustains >= the
+         throughput of a dedicated judge chip at matched total budget
+         (2 x half-capacity chips);
+      4. judge token cost derives from the judge model config: growing
+         d_model 128 -> 256 doubles the FLOPs-derived base cost and
+         strictly increases measured judge-lane token load;
+      5. the calibration shim is virtual-time neutral: running the real
+         tiny-LM compute path yields a summary bit-identical to the
+         oracle-compute path (model-faithful compute, ground-truth-
+         faithful decisions).
+    """
+    import json
+
+    from repro.core.judge_pipeline import default_judge_cfg, judge_token_cost
+
+    n = 300 if smoke else 800
+    base = dict(
+        workload="zipf", mode="cortex", n_requests=n,
+        n_intents=2 * n, cache_ratio=0.6, concurrency=12,
+        qpm=None, prefetch=False, seed=17,
+    )
+
+    def canon(s):
+        return json.dumps(s, sort_keys=True, default=float)
+
+    # --- gate 1: width-0 band == no band, event for event -------------
+    s_none = run_once(**base)                    # band machinery absent
+    s_zero = run_once(**base, judge_band=0.0)    # band armed but degenerate
+    if canon(s_none) != canon(s_zero):
+        raise SystemExit("judge_colocation: width-0 band is not "
+                         "bit-identical to the judge-everything engine")
+
+    # --- gate 2: armed band cuts judge calls, keeps accuracy ----------
+    s_band = run_once(**base, judge_band=0.1)
+    if not (s_band["judge_calls"] < s_none["judge_calls"]):
+        raise SystemExit(
+            f"judge_colocation: band did not reduce judge calls "
+            f"({s_band['judge_calls']} vs {s_none['judge_calls']})")
+    if s_band["info_accuracy"] + 1e-9 < s_none["info_accuracy"]:
+        raise SystemExit(
+            f"judge_colocation: band hurt info accuracy "
+            f"({s_band['info_accuracy']:.4f} < {s_none['info_accuracy']:.4f})")
+
+    # --- gate 3: co-located >= dedicated at matched GPU budget --------
+    # co-located: one 3000-token chip shared by agent+judge lanes;
+    # dedicated: agent chip + judge chip of 1500 tokens each (same total).
+    s_dedic = run_once(**base, judge_band=0.1,
+                       colocated=False, gpu_capacity=1500.0)
+    if s_band["throughput_rps"] + 1e-9 < s_dedic["throughput_rps"]:
+        raise SystemExit(
+            f"judge_colocation: co-located throughput "
+            f"{s_band['throughput_rps']:.3f} < dedicated-matched "
+            f"{s_dedic['throughput_rps']:.3f}")
+
+    # --- gate 4: token cost derives from the judge model config ------
+    c128 = judge_token_cost(default_judge_cfg(d_model=128))
+    c256 = judge_token_cost(default_judge_cfg(d_model=256))
+    if not (c256 > c128 > 0):
+        raise SystemExit("judge_colocation: FLOPs-derived token cost is "
+                         "not monotone in d_model")
+    s_big = run_once(**base, judge_band=0.1, judge_d_model=256)
+    if not (s_big["judge_tokens_base"]
+            > s_band["judge_tokens_base"]):
+        raise SystemExit("judge_colocation: engine judge cost did not "
+                         "track judge d_model")
+    if not (s_big["judge_lane_tokens"]
+            > s_band["judge_lane_tokens"]):
+        raise SystemExit("judge_colocation: judge-lane load did not "
+                         "grow with the larger judge model")
+
+    # --- gate 5: real tiny-LM compute is virtual-time neutral --------
+    # Smoke keeps the LM small; the full run pays the default config.
+    dm = 64 if smoke else 128
+    s_lm = run_once(**base, judge_band=0.1, judge_d_model=dm,
+                    judge_compute="model")
+    s_ref = run_once(**base, judge_band=0.1, judge_d_model=dm)
+    if canon(s_lm) != canon(s_ref):
+        raise SystemExit("judge_colocation: model-compute summary "
+                         "diverges from oracle-compute summary")
+
+    rows = [
+        ("judge/everything", s_none, None, "oracle+flops:d128"),
+        ("judge/band0", s_zero, 0.0, "oracle+flops:d128"),
+        ("judge/band", s_band, 0.1, "oracle+flops:d128"),
+        ("judge/dedicated", s_dedic, 0.1, "oracle+flops:d128"),
+        ("judge/d256", s_big, 0.1, "oracle+flops:d256"),
+        ("judge/lm-compute", s_lm, 0.1, f"model+flops:d{dm}"),
+    ]
+    for name, s, band, jm in rows:
+        emit(name, s["latency_mean"] * 1e6, seed=base["seed"],
+             judge_model=jm, band=band,
+             thpt=round(s["throughput_rps"], 3),
+             hit=round(s["hit_rate"], 3),
+             judge_calls=s["judge_calls"],
+             info_acc=round(s["info_accuracy"], 4),
+             jtok_base=round(s["judge_tokens_base"], 2),
+             jtok_lane=round(s["judge_lane_tokens"], 1),
+             bypass=s.get("band_bypass_hits", 0))

@@ -55,6 +55,7 @@ ALL = {
     "tiered": figures.tiered_sweep,
     "freshness": figures.freshness_sweep,
     "stage1_scaling": figures.stage1_scaling,
+    "judge_colocation": figures.judge_colocation,
     "kernel_ann": kernels_bench.kernel_ann,
     "kernel_flash": kernels_bench.kernel_flash,
     "cache_path": kernels_bench.cache_path_calibration,

@@ -127,8 +127,11 @@ class CortexCache:
         (always False here). The single stage-1 seam — the tiered cache
         overrides this to consult its warm tier, and every lookup flavor
         below goes through it."""
+        # gate at the admission band's lower edge when a band is armed
+        # (DESIGN.md §14): borderline candidates surface so the judge
+        # can recover them; τ_sim exactly otherwise
         found = self.seri.index.search_batch(
-            np.asarray(q_embs), self.seri.top_k, self.seri.tau_sim
+            np.asarray(q_embs), self.seri.top_k, self.seri.stage1_gate
         )
         self.last_scan_rows = self.seri.index.last_scanned
         self.rows_scanned += self.last_scan_rows
@@ -154,28 +157,45 @@ class CortexCache:
         order, candidate order — exactly the order sequential scalar
         calls would use, so per-pair-seeded judges draw identical
         scores), then per-query ``finalize`` applies hit bookkeeping in
-        query order."""
+        query order. Admission-band bypass (DESIGN.md §14) is applied
+        per block BEFORE flattening: a block whose best similarity
+        clears the band's upper edge serves its top candidate without
+        judging (``judge_calls=0``; ``best_score`` then reports the
+        stage-1 similarity, not a judge score). With no band armed every
+        non-empty block is judged — identical to the legacy path."""
+        pipe = self.seri.pipeline
+        results: list[Optional[SeriResult]] = [None] * len(queries)
         flat_q: list[str] = []
         flat_key: list[str] = []
-        for query, (cands, _) in zip(queries, blocks):
+        judged: list[int] = []
+        for i, (query, (cands, sims)) in enumerate(zip(queries, blocks)):
+            if not cands:
+                self.stats.misses += 1
+                results[i] = SeriResult(False, None, 0, 0, 0.0, sims)
+                continue
+            if pipe.admit(sims, self.seri.tau_sim) == "bypass":
+                se = self._rebind(cands[0], now)
+                if se is not None:
+                    self.account_hit(se, now)
+                    results[i] = SeriResult(True, se, len(cands), 0,
+                                            float(sims[0]), sims)
+                    continue
+                # top candidate vanished between stages — judge the rest
             flat_q.extend([query] * len(cands))
             flat_key.extend(c.key for c in cands)
+            judged.append(i)
         flat_scores = (
-            self.seri.judge.score_pairs(flat_q, flat_key) if flat_q
+            pipe.score_pairs(flat_q, flat_key) if flat_q
             else np.zeros(0, np.float32)
         )
-        results = []
         off = 0
-        for query, (cands, sims) in zip(queries, blocks):
+        for i in judged:
+            cands, sims = blocks[i]
             m = len(cands)
-            scores = flat_scores[off:off + m]
+            results[i] = self.finalize(queries[i], cands,
+                                       flat_scores[off:off + m], now,
+                                       sims=sims)
             off += m
-            if not m:
-                self.stats.misses += 1
-                results.append(SeriResult(False, None, 0, 0, 0.0, sims))
-                continue
-            results.append(self.finalize(query, cands, scores, now,
-                                         sims=sims))
         return results
 
     def lookup_batch(self, queries: Sequence[str], q_embs: np.ndarray,
@@ -199,17 +219,20 @@ class CortexCache:
     def stage1_batch(self, queries: Sequence[str], q_embs: np.ndarray,
                      now: float) -> list[list[SemanticElement]]:
         """ANN candidates for a query block (engine micro-batching)."""
-        return self.stage1_batch_flagged(queries, q_embs, now)[0]
+        blocks, _ = self.stage1_batch_flagged(queries, q_embs, now)
+        return [cands for cands, _ in blocks]
 
     def stage1_batch_flagged(self, queries: Sequence[str],
                              q_embs: np.ndarray, now: float):
         """``stage1_batch`` plus per-query slow-tier-consult flags (all
-        False for the single-tier cache). The engine reads the flags for
-        per-tier latency accounting — the consult policy is the cache's,
-        and the engine must never re-derive it."""
+        False for the single-tier cache). Returns ``(blocks, flags)``
+        with blocks = per-query ``(cands, sims)`` — the engine needs the
+        aligned similarities for admission-band classification. The
+        engine reads the flags for per-tier latency accounting — the
+        consult policy is the cache's, and the engine must never
+        re-derive it."""
         self.stats.lookups += len(queries)
-        blocks, flags = self._stage1_blocks(q_embs, now)
-        return [cands for cands, _ in blocks], flags
+        return self._stage1_blocks(q_embs, now)
 
     def _rebind(self, se, now: float):
         """Return the live HOT-tier view for a judge-validated winner, or
@@ -272,7 +295,7 @@ class CortexCache:
         # `is None`, not truthiness: staticity 0 is a legitimate caller
         # override and must not trigger a judge re-estimate
         if staticity is None:
-            staticity = self.seri.judge.staticity(query)
+            staticity = self.seri.pipeline.staticity(query)
         if ttl is None:
             # explicit ttl: federated transfers admit with the SOURCE
             # entry's remaining lifetime so a copy never outlives its origin
@@ -319,7 +342,7 @@ class CortexCache:
         the eviction sequence matches sequential ``insert`` calls."""
         staticities = [
             it["staticity"] if it.get("staticity") is not None
-            else self.seri.judge.staticity(it["query"])
+            else self.seri.pipeline.staticity(it["query"])
             for it in items
         ]
         out = []
@@ -358,24 +381,51 @@ class CortexCache:
         self.stats.bytes_stored = self.usage
         return ids
 
-    def peek_semantic(self, query: str, q_emb: np.ndarray,
-                      now: float) -> Optional[SemanticElement]:
+    def peek_semantic_scored(self, query: str, q_emb: np.ndarray,
+                             now: float):
         """Best live stage-1 match WITHOUT any bookkeeping (no stats, no
-        freq bump, no judge). Used by the prefetcher's presence check and
-        by federation peer peeks. NOTE: this trusts the ANN gate alone —
-        a peer transfer admits the value under the NEW query's key, so a
-        stage-1 false positive at the peer (e.g. a confusable pair above
-        τ_sim) propagates and surfaces as an info_accuracy loss, exactly
-        like any unjudged admission."""
-        se_ids, _ = self.seri.index.search(
-            q_emb, self.seri.top_k, self.seri.tau_sim
+        freq bump, no judge), as ``(se, sim)`` — or None. The gate is
+        ``seri.stage1_gate``, so an armed admission band also widens the
+        peek (in-band peers become lease candidates the pipeline can
+        validate); with no band this is the τ_sim gate exactly."""
+        se_ids, sims = self.seri.index.search(
+            q_emb, self.seri.top_k, self.seri.stage1_gate
         )
-        for i in se_ids:  # similarity-descending
+        for i, sim in zip(se_ids, sims):  # similarity-descending
             if i in self.store:
                 se = self.store[i]
                 if not se.expired(now) and not se.revalidating:
-                    return se
+                    return se, float(sim)
         return None
+
+    def peek_semantic(self, query: str, q_emb: np.ndarray,
+                      now: float) -> Optional[SemanticElement]:
+        """Scored peek minus the similarity. Used by the prefetcher's
+        presence check. NOTE: this trusts the ANN gate alone — callers
+        that ship the value somewhere (federation leases) go through
+        ``peek_lease`` so a stage-1 false positive (e.g. a confusable
+        pair above τ_sim) can be caught by the judge pipeline instead of
+        propagating as an info_accuracy loss."""
+        hit = self.peek_semantic_scored(query, q_emb, now)
+        return hit[0] if hit is not None else None
+
+    def peek_lease(self, query: str, q_emb: np.ndarray,
+                   now: float) -> Optional[SemanticElement]:
+        """Federation's peek/lease validation through the one judge
+        seam (DESIGN.md §14): ANN peek, then
+        ``JudgePipeline.validate_lease`` decides whether the candidate
+        ships — trust-band leases stay ANN-only (every lease, when no
+        band is armed — the legacy protocol exactly), in-band leases pay
+        one judge score at the HOLDER and must clear τ_lsm."""
+        hit = self.peek_semantic_scored(query, q_emb, now)
+        if hit is None:
+            return None
+        se, sim = hit
+        if not self.seri.pipeline.validate_lease(
+            query, se.key, sim, self.seri.tau_sim, self.seri.tau_lsm
+        ):
+            return None
+        return se
 
     def contains_semantic(self, query: str, q_emb: np.ndarray,
                           now: float) -> bool:

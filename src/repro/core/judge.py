@@ -41,13 +41,17 @@ class OracleJudge:
     transient, so threshold recalibration sees fresh noise, as with the
     original shared-stream model)."""
 
-    def __init__(self, world, accuracy: float = 0.98, seed: int = 0):
+    def __init__(self, world, accuracy: float = 0.98, seed: int = 0,
+                 max_pairs: int = 65536):
         self.world = world
         self.seed = seed
         # score distributions: equivalent pairs ~ high, others ~ low
         self.acc = accuracy
-        # nth-scoring counter per pair; bounded by the number of distinct
-        # (query, cached_key) combinations the workload can produce
+        # nth-scoring counter per pair, LRU-bounded at max_pairs (same
+        # idiom as MarkovPrefetcher._prev): an evicted pair that comes
+        # back re-rolls from n=0, which only perturbs borderline-noise
+        # replay on workloads with > max_pairs distinct live pairs
+        self.max_pairs = max_pairs
         self._pair_counts: dict = {}
 
     @staticmethod
@@ -67,8 +71,10 @@ class OracleJudge:
     def _pair_score(self, q: str, c: str) -> float:
         import zlib
 
-        n = self._pair_counts.get((q, c), 0)
-        self._pair_counts[(q, c)] = n + 1
+        n = self._pair_counts.pop((q, c), 0)
+        self._pair_counts[(q, c)] = n + 1  # reinsert = move to LRU tail
+        if len(self._pair_counts) > self.max_pairs:
+            self._pair_counts.pop(next(iter(self._pair_counts)))
         ent = zlib.crc32(f"{q}\x00{c}".encode())
         base = (ent << 32) ^ (n << 8) ^ (self.seed & 0xFF)
         same = self.world.same_intent(q, c)
@@ -139,12 +145,20 @@ class ModelJudge:
                           np.float32)
 
     def staticity(self, query: str) -> int:
-        return 1 + (hash(query) % 10)
+        # stable across processes (Python's hash() is salted per run,
+        # which made admission TTLs irreproducible)
+        import zlib
+
+        return 1 + (zlib.crc32(query.encode()) % 10)
 
 
 class HybridJudge:
     """Oracle decisions + model compute (used by e2e benchmarks so both the
-    semantics AND the measured judge cost are faithful)."""
+    semantics AND the measured judge cost are faithful).
+
+    Kept for back-compat; ``core/judge_pipeline.JudgePipeline(oracle,
+    compute=model)`` is the same shim plus admission and cost derivation,
+    and is what the serving stack threads through."""
 
     def __init__(self, oracle: OracleJudge, model: Optional[ModelJudge] = None):
         self.oracle = oracle

@@ -19,6 +19,10 @@ class EvalRecord:
     cached_key: str
     cached_value: object
     score: float  # S_lsm the judge emitted online
+    # stage-1 cosine of the candidate the judge scored; -1.0 = not
+    # recorded (pre-band logs). Lets the same tick recalibrate the
+    # admission band's trust edge alongside τ_lsm (DESIGN.md §14).
+    sim: float = -1.0
 
 
 @dataclasses.dataclass
@@ -27,6 +31,10 @@ class Recalibration:
     precision: float
     n_samples: int
     curve: list  # (threshold, precision, recall)
+    # smallest stage-1 similarity whose prefix precision ≥ P_target —
+    # the admission band's recalibrated trust edge; None when the
+    # sampled records carry no sims
+    sim_tau: float | None = None
 
 
 def precision_curve(scores: np.ndarray, labels: np.ndarray):
@@ -80,4 +88,13 @@ def recalibrate(
     # realised precision at tau
     keep = scores >= tau
     prec = float(labels[keep].mean()) if keep.any() else 1.0
-    return Recalibration(float(tau), prec, len(sample), curve)
+    # the SAME labeled sample re-sweeps the stage-1 similarity axis:
+    # above sim_tau the ANN alone meets the precision target, which is
+    # exactly the "trust" region the admission band may bypass
+    sims = np.array([r.sim for r in sample], np.float64)
+    sim_tau = None
+    if (sims >= 0).all() and len(sims):
+        sim_tau = float(find_threshold(precision_curve(sims, labels),
+                                       p_target, default=1.0))
+    return Recalibration(float(tau), prec, len(sample), curve,
+                         sim_tau=sim_tau)

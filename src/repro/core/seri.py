@@ -436,8 +436,24 @@ class Seri:
 
     def __init__(self, index: VectorIndex, judge, *, tau_sim: float = 0.9,
                  tau_lsm: float = 0.9, top_k: int = 4):
+        from repro.core.judge_pipeline import as_pipeline
+
         self.index = index
-        self.judge = judge
+        # every stage-2 interaction goes through ONE JudgePipeline
+        # (DESIGN.md §14); a raw judge object is wrapped in a default
+        # pipeline (no admission band, FLOPs-derived token cost)
+        self.pipeline = as_pipeline(judge)
         self.tau_sim = tau_sim
         self.tau_lsm = tau_lsm
         self.top_k = top_k
+
+    @property
+    def judge(self):
+        """Back-compat: the decision scorer behind the pipeline."""
+        return self.pipeline.decisions
+
+    @property
+    def stage1_gate(self) -> float:
+        """Similarity gate stage 1 applies: the admission band's lower
+        edge when armed, τ_sim otherwise."""
+        return self.pipeline.stage1_gate(self.tau_sim)

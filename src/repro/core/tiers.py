@@ -598,7 +598,8 @@ class TieredCache(CortexCache):
         if warm_qi:
             self.tier_stats.warm_lookups += len(warm_qi)
             wfound = self.warm.search_batch(
-                q_embs[warm_qi], self.seri.top_k, self.seri.tau_sim, now
+                q_embs[warm_qi], self.seri.top_k, self.seri.stage1_gate,
+                now
             )
             # the warm coarse scan's rows join the pass's scan-
             # proportional latency term (DESIGN.md §12); its busiest
@@ -688,17 +689,21 @@ class TieredCache(CortexCache):
         self.stats.invalidations += 1
         return True
 
-    def peek_semantic(self, query: str, q_emb: np.ndarray, now: float):
+    def peek_semantic_scored(self, query: str, q_emb: np.ndarray,
+                             now: float):
         """Both tiers, hot first — federation peers can lease warm
         entries (a warm lease carries the ORIGINAL size/value; the warm
-        copy stays put, only a promotion moves it)."""
-        se = super().peek_semantic(query, q_emb, now)
-        if se is not None or not len(self.warm):
-            return se
-        (cands, _sims), = self.warm.search_batch(
-            q_emb[None], self.seri.top_k, self.seri.tau_sim, now
+        copy stays put, only a promotion moves it). Overriding the
+        SCORED peek means ``peek_semantic`` and ``peek_lease`` (the
+        judge-pipeline-validated federation path) inherit warm-tier
+        consultation for free."""
+        hit = super().peek_semantic_scored(query, q_emb, now)
+        if hit is not None or not len(self.warm):
+            return hit
+        (cands, sims), = self.warm.search_batch(
+            q_emb[None], self.seri.top_k, self.seri.stage1_gate, now
         )
-        return cands[0] if cands else None
+        return (cands[0], float(sims[0])) if cands else None
 
     @property
     def total_usage(self) -> int:

@@ -51,7 +51,13 @@ def run_once(
     concurrency: int | None = None,
     qpm: float | None = 100.0,
     colocated: bool = True,
+    gpu_capacity: float | None = None,
     judge_acc: float = 0.98,
+    judge_band: float | None = None,
+    judge_adaptive_band: bool = False,
+    judge_compute: str = "oracle",
+    judge_d_model: int = 128,
+    judge_max_len: int = 128,
     recalibrate_every: float | None = None,
     prefetch: bool = True,
     max_ttl: float = 3600.0,
@@ -95,7 +101,28 @@ def run_once(
     cap = int(cache_ratio * world._sizes.sum())
     cache = exact = None
     if mode in ("cortex", "cortex-nojudge"):
-        judge = OracleJudge(world, accuracy=judge_acc, seed=seed + 2)
+        from repro.core.judge_pipeline import (AdmissionBand, JudgePipeline,
+                                               default_judge_cfg)
+
+        oracle = OracleJudge(world, accuracy=judge_acc, seed=seed + 2)
+        jcfg = default_judge_cfg(d_model=judge_d_model)
+        model = None
+        if judge_compute == "model":
+            # pay real tiny-LM prefill per judge micro-batch (the
+            # calibration shim: oracle decisions, model compute)
+            from repro.core.judge import ModelJudge
+
+            model = ModelJudge(cfg=jcfg, max_len=judge_max_len,
+                               seed=seed + 6)
+        band = None
+        if judge_band is not None:
+            band = AdmissionBand(width=judge_band,
+                                 adaptive=judge_adaptive_band)
+        # the ONE judge seam (DESIGN.md §14): admission band + model-
+        # derived token cost + optional real compute. judge_band=None
+        # (and oracle compute) is today's engine, event for event.
+        judge = JudgePipeline(oracle, compute=model, judge_cfg=jcfg,
+                              max_len=judge_max_len, band=band)
         # clustered (IVF) stage-1 routing, DESIGN.md §12; nprobe=None
         # probes every cluster (the brute-force-parity mode). shards>1
         # (the §13 mesh partition) requires the router, so it implies
@@ -142,7 +169,9 @@ def run_once(
         cache=cache,
         exact=exact,
         remote=remote,
-        gpu=GPU(GPUConfig(colocated=colocated)),
+        gpu=GPU(GPUConfig(colocated=colocated)
+                if gpu_capacity is None else
+                GPUConfig(capacity=gpu_capacity, colocated=colocated)),
         cfg=EngineConfig(
             closed_loop=concurrency,
             prefetch=prefetch,
@@ -201,6 +230,27 @@ def main(argv=None):
     ap.add_argument("--qpm", type=float, default=100.0)
     ap.add_argument("--no-rate-limit", action="store_true")
     ap.add_argument("--dedicated-judge", action="store_true")
+    ap.add_argument("--gpu-capacity", type=float, default=None,
+                    help="per-chip token-eq/s budget (default 3000); with "
+                         "--dedicated-judge, 1500 matches the colocated "
+                         "single-chip budget (the Fig 6 comparison)")
+    ap.add_argument("--judge-band", type=float, default=None,
+                    help="adaptive-admission band width around tau_sim "
+                         "(DESIGN.md §14): best-sim >= tau_sim+w/2 "
+                         "bypasses the judge, < tau_sim-w/2 goes straight "
+                         "to origin; None/0 = judge everything (legacy)")
+    ap.add_argument("--judge-adaptive-band", action="store_true",
+                    help="recalibrate the band width alongside tau_lsm "
+                         "(needs --recalibrate-every)")
+    ap.add_argument("--judge-compute", default="oracle",
+                    choices=["oracle", "model"],
+                    help="'model' pays real tiny-LM prefill per judge "
+                         "micro-batch (decisions stay oracle-faithful)")
+    ap.add_argument("--judge-d-model", type=int, default=128,
+                    help="judge model width; sets the FLOPs-derived "
+                         "judge token cost (16.0 token-eq at 128)")
+    ap.add_argument("--judge-max-len", type=int, default=128,
+                    help="judge prefill length in tokens")
     ap.add_argument("--no-prefetch", action="store_true")
     ap.add_argument("--recalibrate-every", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -215,6 +265,12 @@ def main(argv=None):
         concurrency=args.concurrency,
         qpm=None if args.no_rate_limit else args.qpm,
         colocated=not args.dedicated_judge,
+        gpu_capacity=args.gpu_capacity,
+        judge_band=args.judge_band,
+        judge_adaptive_band=args.judge_adaptive_band,
+        judge_compute=args.judge_compute,
+        judge_d_model=args.judge_d_model,
+        judge_max_len=args.judge_max_len,
         recalibrate_every=args.recalibrate_every,
         prefetch=not args.no_prefetch,
         warm_frac=args.warm_frac,

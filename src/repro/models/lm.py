@@ -512,6 +512,14 @@ class LM:
         logits = self._logits(ctx, params, x[:, -1:, :])
         return logits, new_caches
 
+    def prefill_flops(self, tokens: int) -> float:
+        """Forward prefill FLOPs over ``tokens`` tokens (2·N_active·T,
+        the roofline model). The JudgePipeline derives the judge's
+        token-equivalent serving cost from this — see DESIGN.md §14."""
+        from repro.launch.roofline import model_flops
+
+        return model_flops(self.cfg, "prefill", tokens)
+
     def _empty_cache_tree(self):
         cfg = self.cfg
         tree: dict[str, Any] = {"blocks": None}

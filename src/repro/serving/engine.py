@@ -46,7 +46,13 @@ from repro.serving.remote import RemoteDataService
 class EngineConfig:
     think_tokens: float = 160.0
     answer_tokens: float = 160.0
-    judge_tokens: float = 24.0          # prefill-only classification job
+    judge_tokens: Optional[float] = None  # prefill-only classification
+                                        # job cost; None (default) =
+                                        # derive from the judge model
+                                        # config's prefill FLOPs via the
+                                        # cache's JudgePipeline
+                                        # (DESIGN.md §14). A float pins
+                                        # the legacy hand-set cost.
     t_cache_cpu: float = 0.02           # embed + ANN fixed cost (Fig 11)
     t_cache_per_row: float = 0.0        # stage-1 cost PER ROW SCANNED:
                                         # the full pass costs
@@ -334,7 +340,7 @@ class Engine:
         # proceeding (§10 per-tier stage-1 cost) — including consults
         # that came back empty. The cache reports the consult fact per
         # query; the engine must not re-derive that policy.
-        cands_block, consults = self.cache.stage1_batch_flagged(
+        blocks, consults = self.cache.stage1_batch_flagged(
             queries, q_embs, now
         )
         # scan-proportional stage-1 cost (§12): the flush instant covers
@@ -356,7 +362,7 @@ class Engine:
             self._stage1_open = now + t_scan
             self._push(self._stage1_open + self._stage1_latency(),
                        self._stage1_flush)
-        entries = list(zip(batch, cands_block, consults))
+        entries = list(zip(batch, blocks, consults))
         if t_scan > 0:
             self._push(
                 now + t_scan,
@@ -371,13 +377,13 @@ class Engine:
         clock events in the scan window may have evicted/expired/
         promoted candidates, so their views are re-examined first."""
         deferred = []
-        for (st, q, t0), cands, warm in entries:
+        for (st, q, t0), (cands, sims), warm in entries:
             if revalidate:
-                cands = self._revive(cands, now)
+                cands, sims = self._revive(cands, sims, now)
             if warm:
-                deferred.append((st, q, t0, cands))
+                deferred.append((st, q, t0, cands, sims))
                 continue
-            self._stage1_resolve(st, q, t0, cands, now)
+            self._stage1_resolve(st, q, t0, cands, sims, now)
         if deferred:
             self._push(
                 now + self.cfg.t_cache_warm,
@@ -389,23 +395,28 @@ class Engine:
         # judge lane has free slots)
         self._dispatch_judges()
 
-    def _revive(self, cands, now: float) -> list:
+    def _revive(self, cands, sims, now: float):
         """Re-examine candidate views after a deferral window: rebind
         views whose entry promoted meanwhile, drop evicted/expired/
-        revalidating ones."""
+        revalidating ones. Sims stay ALIGNED with the surviving views
+        (the admission band classifies on them)."""
         live = []
-        for c in cands:
+        keep = []
+        for j, c in enumerate(cands):
             if not c.valid and c.se_id in self.cache.store:
                 c = self.cache.store[c.se_id]  # promoted meanwhile
             if c.valid and not c.expired(now) and \
                     not getattr(c, "revalidating", False):
                 live.append(c)
-        return live
+                keep.append(j)
+        return live, np.asarray(sims)[keep].astype(np.float32)
 
     def _stage1_resolve(self, st: _ReqState, q: str, t0: float, cands,
-                        now: float):
+                        sims, now: float):
         st.rec.cache_time += now - t0
         if not cands:
+            # under an armed band a sub-lo best match never surfaced
+            # here — the straight-to-origin shortcut IS this path
             self.cache.miss_no_candidates()
             self._go_remote(st)
             return
@@ -423,7 +434,23 @@ class Engine:
             self._after_validated(st, key)
             self._observe(st, value, from_cache=True)
             return
-        self._judge_request(st, q, cands)
+        # adaptive admission (DESIGN.md §14): a best-similarity above the
+        # band's trust edge is served without judge latency — through the
+        # same shared hit accounting as the nojudge ablation. With no
+        # band armed, admit() is a constant "judge" and this is the
+        # legacy judge-everything engine, event for event.
+        if self.cache.seri.pipeline.admit(
+            sims, self.cache.seri.tau_sim
+        ) == "bypass":
+            se = cands[0]
+            key, value = se.key, se.value
+            self._note_stale(se, now)
+            self.cache.account_hit(se, now)
+            st.rec.cache_hits += 1
+            self._after_validated(st, key)
+            self._observe(st, value, from_cache=True)
+            return
+        self._judge_request(st, q, cands, sims)
 
     def _warm_resolve(self, deferred, now: float):
         """Warm-consulting requests resume after t_cache_warm; their
@@ -431,19 +458,23 @@ class Engine:
         are re-examined: clock events between the flush and this wakeup
         may have promoted a warm view (rebind to the live hot row — it
         is still a perfectly good candidate), evicted it, or expired it."""
-        for st, q, t0, cands in deferred:
-            self._stage1_resolve(st, q, t0, self._revive(cands, now), now)
+        for st, q, t0, cands, sims in deferred:
+            live, live_sims = self._revive(cands, sims, now)
+            self._stage1_resolve(st, q, t0, live, live_sims, now)
         self._dispatch_judges()
 
-    def _judge_request(self, st: _ReqState, q: str, cands):
+    def _judge_request(self, st: _ReqState, q: str, cands, sims):
         # done/timed_out live on the ENTRY, not the request: a request has
         # one judge job per round, and a stale timed-out entry from an
         # earlier round must never be revived by a later round's flags.
         # snapshot keys/values now: candidates may be evicted (and their
-        # SoA rows reused) while the judge job waits on the accelerator
+        # SoA rows reused) while the judge job waits on the accelerator.
+        # sims ride along so eval-log records carry the stage-1 cosine
+        # the band recalibration sweeps.
         entry = dict(
             st=st, q=q, cands=cands, t0=self._now,
             keys=[c.key for c in cands], values=[c.value for c in cands],
+            sims=[float(s) for s in sims],
             done=False, timed_out=False,
         )
         self._judge_backlog.append(entry)
@@ -474,10 +505,17 @@ class Engine:
                 batch.append(e)
             if not batch:
                 return
-            tokens = judge_batch_tokens(
-                self.cfg.judge_tokens, len(batch),
-                self.cfg.judge_batch_marginal,
-            )
+            # cost of the micro-batch: model-config-derived via the
+            # pipeline unless the config pins a legacy hand-set base
+            if self.cfg.judge_tokens is None:
+                tokens = self.cache.seri.pipeline.batch_tokens(
+                    len(batch), self.cfg.judge_batch_marginal
+                )
+            else:
+                tokens = judge_batch_tokens(
+                    self.cfg.judge_tokens, len(batch),
+                    self.cfg.judge_batch_marginal,
+                )
             self._submit(
                 self.gpu.judge, tokens,
                 lambda now, b=batch: self._judge_batch_done(b, now),
@@ -494,7 +532,7 @@ class Engine:
         for e in live:
             flat_q.extend([e["q"]] * len(e["cands"]))
             flat_k.extend(e["keys"])
-        scores = self.cache.seri.judge.score_pairs(flat_q, flat_k)
+        scores = self.cache.seri.pipeline.score_pairs(flat_q, flat_k)
         off = 0
         for e in live:
             m = len(e["cands"])
@@ -502,8 +540,11 @@ class Engine:
             off += m
             st = e["st"]
             st.rec.cache_time += now - e["t0"]
-            for key, val, s in zip(e["keys"], e["values"], sc):
-                self.eval_log.append(EvalRecord(e["q"], key, val, float(s)))
+            for key, val, s, sim in zip(e["keys"], e["values"], sc,
+                                        e["sims"]):
+                self.eval_log.append(
+                    EvalRecord(e["q"], key, val, float(s), sim=sim)
+                )
             res = self.cache.finalize(e["q"], e["cands"], sc, now)
             if res.hit:
                 self._note_stale(res.se, now)
@@ -711,6 +752,18 @@ class Engine:
             tau = (1.0 - a) * self.cache.seri.tau_lsm + a * res.tau
             self.cache.seri.tau_lsm = tau
             self.recal_history.append((self._now, tau))
+            # admission-band recalibration (DESIGN.md §14): the same
+            # labeled sample yields the smallest stage-1 similarity
+            # whose precision meets the target — the trust edge. The
+            # band's width re-centers on 2·(edge − τ_sim) under the
+            # same EMA hysteresis as τ_lsm.
+            band = self.cache.seri.pipeline.band
+            if band is not None and band.adaptive and \
+                    res.sim_tau is not None:
+                w_target = 2.0 * max(
+                    0.0, res.sim_tau - self.cache.seri.tau_sim
+                )
+                band.width = (1.0 - a) * band.width + a * w_target
         self._push(self._now + self.cfg.recalibrate_every, lambda now=None: self._recal_tick())
 
     # --------------------------------------------------------- run
@@ -823,7 +876,31 @@ class Engine:
                     self.cache.rows_scanned / s.lookups if s.lookups
                     else 0.0
                 ),
+                # judge economics (DESIGN.md §14): the per-job token
+                # cost actually charged (model-config-derived unless the
+                # config pinned a legacy constant) and the judge lane's
+                # processed token-equivalents — changing the judge's
+                # d_model moves BOTH, which is the "no constant left on
+                # the path" property the colocation sweep gates on.
+                judge_tokens_base=float(
+                    self.cfg.judge_tokens
+                    if self.cfg.judge_tokens is not None
+                    else self.cache.seri.pipeline.base_tokens
+                ),
+                judge_lane_tokens=float(self.gpu.judge.busy_tokens),
             )
+            pipe = self.cache.seri.pipeline
+            if pipe.band is not None and pipe.band.width > 0:
+                # admission band (§14). Keyed OFF at width 0 so the
+                # width-0 engine's summary stays byte-identical to the
+                # band-free engine (the sweep's bit-identity gate).
+                out.update(
+                    band_width=float(pipe.band.width),
+                    band_bypass_hits=pipe.stats.bypass_hits,
+                    band_judged=pipe.stats.band_judged,
+                    lease_validations=pipe.stats.lease_validations,
+                    lease_rejections=pipe.stats.lease_rejections,
+                )
             shards = getattr(self.cache, "stage1_shards", 1)
             if shards > 1:
                 # mesh-sharded stage 1 (§13). Keyed OFF when unsharded

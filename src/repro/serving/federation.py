@@ -171,13 +171,17 @@ class Federation:
 
     def _probe(self, engine, st, q, q_emb, t0, peer, rtt, state) -> None:
         """Probe arrives at the sibling: stage-1 peek against its cache
-        as of NOW (no judge, no stats mutation on the peer)."""
+        as of NOW, validated through the peer's judge pipeline
+        (``peek_lease``, DESIGN.md §14): with no admission band armed
+        the peek stays ANN-only — the legacy protocol exactly — while an
+        armed band judges in-band candidates at the holder before they
+        ship (peer-side judge time folds into the probe's half-RTT)."""
         lease = None
         if not state["decided"]:  # decided = probe logically cancelled
             # a tiered peer consults BOTH tiers: warm entries are
             # leasable too (the lease carries the decompressed value and
             # the ORIGINAL size — the transfer ships a full value)
-            se = peer.cache.peek_semantic(q, q_emb, self.clock.now)
+            se = peer.cache.peek_lease(q, q_emb, self.clock.now)
             if se is not None:
                 if getattr(se, "tier", "hot") == "warm":
                     self.stats.warm_leases += 1
@@ -275,6 +279,9 @@ class FederationRunner:
         transfer_cost: float = 5e-4,
         bandwidth: float = 50e6,
         judge_acc: float = 0.98,
+        judge_band: Optional[float] = None,  # admission-band width; also
+                                             # arms judge-validated
+                                             # peer leases (§14)
         engine_cfg: Optional[EngineConfig] = None,
         gpu_cfg: Optional[GPUConfig] = None,
         warm_frac: Optional[float] = None,
@@ -309,6 +316,18 @@ class FederationRunner:
             self._next_region += 1
             return ccfg
 
+        def wrap_judge(judge):
+            # one JudgePipeline per cache (DESIGN.md §14): an armed band
+            # gives every region adaptive admission locally AND
+            # judge-validated in-band leases on the peek path
+            if judge_band is None:
+                return judge
+            from repro.core.judge_pipeline import (AdmissionBand,
+                                                   JudgePipeline)
+
+            return JudgePipeline(judge,
+                                 band=AdmissionBand(width=judge_band))
+
         def build_cache(capacity: int, judge) -> CortexCache:
             # warm_frac splits each region's byte budget into a tiered
             # hot+warm pair at EQUAL total bytes (DESIGN.md §10) — peers
@@ -340,7 +359,9 @@ class FederationRunner:
         shared_cache = None
         shared_mgr = None
         if topology == "global":
-            judge = OracleJudge(world, accuracy=judge_acc, seed=seed + 7)
+            judge = wrap_judge(
+                OracleJudge(world, accuracy=judge_acc, seed=seed + 7)
+            )
             shared_cache = build_cache(
                 sum(int(rc.cache_ratio * footprint) for rc in region_cfgs),
                 judge,
@@ -349,9 +370,9 @@ class FederationRunner:
             if shared_cache is not None:
                 cache = shared_cache
             else:
-                judge = OracleJudge(
+                judge = wrap_judge(OracleJudge(
                     world, accuracy=judge_acc, seed=seed + 101 * (rid + 1)
-                )
+                ))
                 cache = build_cache(
                     int(rc.cache_ratio * footprint), judge,
                 )

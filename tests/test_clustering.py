@@ -255,7 +255,12 @@ def test_engine_scan_proportional_latency():
     assert slow["rows_scanned"] > 0 and flat["rows_scanned"] > 0
     routed = run_once(t_cache_per_row=1e-4, cluster=True, n_clusters=16,
                       nprobe=4, **kw)
-    if routed["rows_scanned"] < flat["rows_scanned"]:
+    # compare scan volume against the run under the SAME latency model
+    # (`slow`), not `flat`: pass granularity — and therefore rows per
+    # pass — depends on event timing, so flat's count is not a routing
+    # baseline. Only when routing actually cut the scan does the
+    # cache-time win follow.
+    if routed["rows_scanned"] < slow["rows_scanned"]:
         assert routed["cache_time_mean"] < slow["cache_time_mean"]
 
 
