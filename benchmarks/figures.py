@@ -6,6 +6,7 @@ import numpy as np
 
 from benchmarks.common import DATASETS, emit, fmt, run_ds
 from repro.launch.serve import run_once
+from repro.obs.metrics import percentile
 
 RATIOS = (0.1, 0.2, 0.4, 0.6)
 
@@ -504,7 +505,7 @@ def stage1_scaling(smoke: bool = False):
         )
         s = eng.run()
         hits = [r.latency for r in eng.records if r.remote_calls == 0]
-        p50 = float(np.percentile(hits, 50)) if hits else float("nan")
+        p50 = percentile(hits, 50) if hits else float("nan")
         mean = float(np.mean(hits)) if hits else float("nan")
         return s, p50, mean
 
@@ -957,3 +958,88 @@ def judge_colocation(smoke=False):
              jtok_base=round(s["judge_tokens_base"], 2),
              jtok_lane=round(s["judge_lane_tokens"], 1),
              bypass=s.get("band_bypass_hits", 0))
+
+
+def obs_trace(smoke: bool = False):
+    """§15 observability gate: traced engine + federation runs.
+
+    Four properties, each a hard gate (SystemExit on violation):
+      1. conservation — every request's span segments tile [arrival,
+         t_done] with exact float equality at every boundary, so the
+         telescoped total == rec.latency bit-for-bit, on both a tiered
+         banded engine run and a 3-region peered federation run;
+      2. neutrality — the traced engine run's summary is byte-identical
+         to the untraced run (tracing must not perturb virtual time);
+      3. determinism — same seed => byte-identical span JSONL artifact;
+      4. artifacts — the emitted rows carry ``trace_path``, so a CI
+         `--json --trace .` invocation leaves Perfetto-loadable TRACE_*
+         files next to the BENCH_*.json it uploads.
+
+    The benchmark is already CI-sized; ``smoke`` only halves the request
+    counts.
+    """
+    import json
+    import os
+    import tempfile
+
+    from benchmarks import common
+    from repro.data.workloads import region_workloads
+    from repro.data.world import SemanticWorld
+    from repro.obs.analyze import attribution, check_conservation
+    from repro.obs.export import export_trace
+    from repro.obs.trace import Tracer
+    from repro.serving.federation import FederationRunner
+
+    out_dir = common.TRACE_DIR or tempfile.mkdtemp(prefix="obs_trace_")
+    n = 80 if smoke else 150
+    kw = dict(n_requests=n, concurrency=4, warm_frac=0.5,
+              workload="longtail", tail_len=40, judge_band=0.1, seed=3)
+
+    def canon(s):
+        return json.dumps(s, sort_keys=True, default=float)
+
+    # --- gates 1-3 on the engine: run_once(trace=...) itself raises on
+    # conservation violations, so finishing at all is gate 1 -----------
+    s_plain = run_once(**kw)
+    s1 = run_once(trace=os.path.join(out_dir, "TRACE_engine"), **kw)
+    s2 = run_once(trace=os.path.join(out_dir, "TRACE_engine_rerun"), **kw)
+    trace_keys = ("trace_jsonl", "trace_chrome", "trace_spans",
+                  "trace_conservation_violations")
+    if canon({k: v for k, v in s1.items() if k not in trace_keys}) \
+            != canon(s_plain):
+        raise SystemExit("obs_trace: traced summary diverges from the "
+                         "untraced run — tracing is not event-neutral")
+    with open(s1["trace_jsonl"], "rb") as f1, \
+            open(s2["trace_jsonl"], "rb") as f2:
+        if f1.read() != f2.read():
+            raise SystemExit("obs_trace: same-seed runs produced "
+                             "different span JSONL")
+    emit("obs_trace/engine", s1["latency_mean"] * 1e6, seed=kw["seed"],
+         band=kw["judge_band"], trace_path=s1["trace_jsonl"],
+         spans=s1["trace_spans"], violations=0,
+         lat_ms=round(s1["latency_mean"] * 1e3, 1),
+         hit=round(s1["hit_rate"], 3))
+
+    # --- gate 1 on federation: one Tracer shared by three regions -----
+    world = SemanticWorld(n_intents=300, dim=64, seed=5)
+    reqs = region_workloads(world, n_regions=3,
+                            n_per_region=(40 if smoke else 80), seed=6)
+    tracer = Tracer()
+    fr = FederationRunner(world=world, region_requests=reqs,
+                          topology="peered", seed=7, tracer=tracer)
+    s_fed = fr.run()
+    recs = fr.records_by_region()
+    violations = check_conservation(tracer, recs)
+    if violations:
+        raise SystemExit(
+            "obs_trace: federation conservation violations:\n  "
+            + "\n  ".join(violations[:10]))
+    paths = export_trace(tracer, os.path.join(out_dir, "TRACE_federation"))
+    report = attribution(tracer, recs)
+    fed = report.get("federated", {})
+    emit("obs_trace/federation",
+         s_fed["aggregate"]["latency_p50"] * 1e6, seed=7,
+         trace_path=paths["jsonl"], spans=len(tracer.spans), violations=0,
+         fed_requests=fed.get("n", 0),
+         fed_p99_ms=round(fed.get("latency_p99", float("nan")) * 1e3, 1),
+         hit=round(s_fed["aggregate"]["hit_rate"], 3))

@@ -56,6 +56,7 @@ ALL = {
     "freshness": figures.freshness_sweep,
     "stage1_scaling": figures.stage1_scaling,
     "judge_colocation": figures.judge_colocation,
+    "obs_trace": figures.obs_trace,
     "kernel_ann": kernels_bench.kernel_ann,
     "kernel_flash": kernels_bench.kernel_flash,
     "cache_path": kernels_bench.cache_path_calibration,
@@ -71,7 +72,14 @@ def main() -> None:
                     help="tiny problem sizes (CI regression gate)")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_<name>.json per benchmark")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="write §15 span traces (TRACE_*.jsonl + "
+                         "Perfetto-loadable TRACE_*.chrome.json) for "
+                         "traceable runs into DIR")
     args = ap.parse_args()
+    if args.trace is not None:
+        os.makedirs(args.trace, exist_ok=True)
+        common.TRACE_DIR = args.trace
     names = list(ALL) if not args.only else args.only.split(",")
     sha = git_sha() if args.json else "unknown"
     devices = 0
@@ -89,7 +97,7 @@ def main() -> None:
             sys.exit(2)
         t = time.time()
         fn = ALL[n]
-        common.ROWS.clear()
+        common.reset_rows()
         try:
             if args.smoke and "smoke" in inspect.signature(fn).parameters:
                 fn(smoke=True)
@@ -99,15 +107,18 @@ def main() -> None:
             # write rows even when a regression gate SystemExits, so a
             # failing CI run still leaves the measurements behind. Every
             # row is stamped with the git sha and the jax device count
-            # (and carries its seed / shard / nprobe config when the
-            # benchmark is so parameterized) so BENCH_*.json files from
-            # different PRs diff cleanly.
+            # (and carries its seed / shard / nprobe config plus the
+            # wall_s / trace_path stamps emit() adds) so BENCH_*.json
+            # files from different PRs diff cleanly; the top-level
+            # wall_s records the whole benchmark's real runtime.
             if args.json:
                 rows = [dict(r, git_sha=sha, devices=devices)
                         for r in common.ROWS]
                 with open(f"BENCH_{n}.json", "w") as f:
                     json.dump({"name": n, "git_sha": sha,
-                               "devices": devices, "rows": rows}, f,
+                               "devices": devices,
+                               "wall_s": round(time.time() - t, 3),
+                               "rows": rows}, f,
                               indent=1, default=str)
         print(f"# {n} done in {time.time()-t:.1f}s", file=sys.stderr)
     print(f"# all benchmarks done in {time.time()-t0:.1f}s", file=sys.stderr)

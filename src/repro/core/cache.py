@@ -28,6 +28,7 @@ import numpy as np
 from repro.core.se_store import SEStore, SEStoreMapping
 from repro.core.semantic_element import SemanticElement, ttl_from_staticity
 from repro.core.seri import Seri, SeriResult, VectorIndex
+from repro.obs.metrics import ScanMetrics
 
 
 @dataclasses.dataclass
@@ -68,23 +69,15 @@ class CortexCache:
         self.store = SEStoreMapping(self.soa)  # dict-like se_id -> SE view
         self.usage = 0
         self.stats = CacheStats()
-        # stage-1 scan accounting (DESIGN.md §12). Deliberately NOT in
-        # CacheStats: scan volume is batch-granularity dependent (a
+        # stage-1 scan accounting (DESIGN.md §12/§15). Deliberately NOT
+        # in CacheStats: scan volume is batch-granularity dependent (a
         # scalar replay scans the index once per QUERY, a batched run
         # once per PASS), and CacheStats holds only quantities the
         # scalar and batched paths must agree on — same reasoning that
-        # keeps warm_lookups in TierStats. ``last_scan_rows`` is the
-        # most recent pass (both tiers), consumed synchronously by the
-        # engine for the scan-proportional latency term;
-        # ``rows_scanned`` is the running total.
-        self.last_scan_rows = 0
-        self.rows_scanned = 0
-        # max-over-shards companions (DESIGN.md §13): under a sharded
-        # router the shards scan in parallel, so the engine's critical
-        # path charges the busiest shard, not the total. Equal to the
-        # totals whenever stage1_shards == 1.
-        self.last_scan_shard_rows = 0
-        self.rows_scanned_max_shard = 0
+        # keeps warm_lookups in TierStats. First-class home:
+        # obs.metrics.ScanMetrics (caveats documented there); the legacy
+        # attribute names remain as read-only properties below.
+        self.scan = ScanMetrics()
         self._next_id = 0
         # freshness seam: the tiered cache fires this when a warm entry
         # re-enters HOT, so the FreshnessManager can re-arm its
@@ -95,6 +88,28 @@ class CortexCache:
     def rows(self) -> dict[int, int]:
         """se_id -> index row (row-aligned SoA: the store's own map)."""
         return self.soa.id2row
+
+    # legacy scan-counter names (pre-§15), now backed by ScanMetrics.
+    # ``last_scan_rows`` is the most recent pass (both tiers), consumed
+    # synchronously by the engine for the scan-proportional latency term;
+    # ``rows_scanned`` is the running total; the *_shard variants are the
+    # §13 max-over-shards companions (equal whenever stage1_shards == 1).
+
+    @property
+    def last_scan_rows(self) -> int:
+        return self.scan.last_rows
+
+    @property
+    def rows_scanned(self) -> int:
+        return self.scan.total_rows
+
+    @property
+    def last_scan_shard_rows(self) -> int:
+        return self.scan.last_max_shard_rows
+
+    @property
+    def rows_scanned_max_shard(self) -> int:
+        return self.scan.total_max_shard_rows
 
     @property
     def stage1_shards(self) -> int:
@@ -133,10 +148,8 @@ class CortexCache:
         found = self.seri.index.search_batch(
             np.asarray(q_embs), self.seri.top_k, self.seri.stage1_gate
         )
-        self.last_scan_rows = self.seri.index.last_scanned
-        self.rows_scanned += self.last_scan_rows
-        self.last_scan_shard_rows = self.seri.index.last_scanned_max_shard
-        self.rows_scanned_max_shard += self.last_scan_shard_rows
+        self.scan.note_pass(self.seri.index.last_scanned,
+                            self.seri.index.last_scanned_max_shard)
         out = []
         for se_ids, sims in found:
             # revalidating rows are KNOWN stale (change-feed notice,

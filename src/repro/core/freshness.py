@@ -53,6 +53,7 @@ import dataclasses
 from typing import Callable, Optional
 
 from repro.core.cache import CortexCache
+from repro.obs.trace import BACKGROUND, NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -150,6 +151,8 @@ class FreshnessManager:
         self.feed = feed
         self.stats = FreshnessStats()
         self._inflight: set[int] = set()
+        self._tracer = NULL_TRACER
+        self._region = 0
         if feed is not None and self.cfg.invalidation:
             # interest predicate lets the feed stop firing for intents
             # this cache no longer holds (O(1) via the intent index)
@@ -159,6 +162,13 @@ class FreshnessManager:
             # promotions re-enter HOT without passing the engine's
             # insert hook — re-arm their refresh-ahead timers here
             cache.on_promote = self._on_promote
+
+    def bind_tracer(self, tracer, region: int = 0) -> None:
+        """Arm §15 tracing: refresh fetches emit background spans,
+        invalidation drops emit background markers. Observational only —
+        no virtual-time effect."""
+        self._tracer = tracer
+        self._region = region
 
     # ------------------------------------------------------------ hooks
 
@@ -207,6 +217,8 @@ class FreshnessManager:
                 continue
             self.cache.invalidate_se(se.se_id, now)
             self.stats.invalidated += 1
+            self._tracer.marker(BACKGROUND, "invalidation_drop", now,
+                                self._region)
 
     # ---------------------------------------------------- refresh-ahead
 
@@ -261,6 +273,8 @@ class FreshnessManager:
             cost_mult=self.world.cost_mult(key),
         )
         self.stats.refresh_cost += out.cost
+        self._tracer.span(BACKGROUND, "refresh", now, out.finish,
+                          self._region)
         self.clock.push(out.finish, self._refresh_done, se_id, key)
         return True
 

@@ -33,6 +33,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.obs.trace import BACKGROUND, NULL_TRACER
 from repro.serving.gpu import judge_batch_tokens
 
 
@@ -151,6 +152,17 @@ class JudgePipeline:
             else judge_token_cost(self.judge_cfg, self.max_len)
         )
         self.stats = PipelineStats()
+        self._tracer = NULL_TRACER
+        self._clock = None
+        self._region = 0
+
+    def bind_tracer(self, tracer, clock, region: int = 0) -> None:
+        """Arm §15 tracing: holder-side lease validations emit a
+        background marker stamped with this pipeline's region. Purely
+        observational — no virtual-time effect."""
+        self._tracer = tracer
+        self._clock = clock
+        self._region = region
 
     # ------------------------------------------------------------ scoring
 
@@ -209,6 +221,9 @@ class JudgePipeline:
         if self.band.classify(sim, tau_sim) != "uncertain":
             return True
         self.stats.lease_validations += 1
+        if self._tracer.enabled and self._clock is not None:
+            self._tracer.marker(BACKGROUND, "lease_validate",
+                                self._clock.now, self._region)
         score = float(self.score_pairs([query], [key])[0])
         if score >= tau_lsm:
             return True

@@ -604,12 +604,10 @@ class TieredCache(CortexCache):
             # the warm coarse scan's rows join the pass's scan-
             # proportional latency term (DESIGN.md §12); its busiest
             # shard joins the max-over-shards critical path (§13)
-            self.last_scan_rows += self.warm.index.last_scanned
-            self.rows_scanned += self.warm.index.last_scanned
-            self.last_scan_shard_rows += \
-                self.warm.index.last_scanned_max_shard
-            self.rows_scanned_max_shard += \
-                self.warm.index.last_scanned_max_shard
+            self.scan.add_warm_pass(
+                self.warm.index.last_scanned,
+                self.warm.index.last_scanned_max_shard,
+            )
             for bi, (wc, wsims) in zip(warm_qi, wfound):
                 # the consult FACT (flowing back through
                 # stage1_batch_flagged) feeds the engine's per-tier

@@ -82,6 +82,7 @@ def run_once(
     t_cache_per_row: float = 0.0,
     shards: int = 1,
     t_shard_merge: float = 0.0,
+    trace: str | None = None,
     seed: int = 0,
 ) -> dict:
     # churn_period switches the ground truth to a MutableWorld whose
@@ -162,6 +163,11 @@ def run_once(
             ),
             feed=feed,
         )
+    tracer = None
+    if trace is not None:
+        from repro.obs.trace import Tracer
+
+        tracer = Tracer()
     eng = Engine(
         world=world,
         requests=reqs,
@@ -186,8 +192,26 @@ def run_once(
         ),
         clock=clock,
         freshness=freshness,
+        tracer=tracer,
     )
-    return eng.run()
+    out = eng.run()
+    if tracer is not None:
+        from repro.obs.analyze import check_conservation
+        from repro.obs.export import export_trace
+
+        paths = export_trace(tracer, trace)
+        violations = check_conservation(tracer, eng.records)
+        # traced runs get extra keys ONLY — with trace=None the summary
+        # is byte-identical to the untraced engine's
+        out["trace_jsonl"] = paths["jsonl"]
+        out["trace_chrome"] = paths["chrome"]
+        out["trace_spans"] = len(tracer.spans)
+        out["trace_conservation_violations"] = len(violations)
+        if violations:
+            raise AssertionError(
+                "span conservation violated:\n" + "\n".join(violations[:20])
+            )
+    return out
 
 
 def main(argv=None):
@@ -253,6 +277,11 @@ def main(argv=None):
                     help="judge prefill length in tokens")
     ap.add_argument("--no-prefetch", action="store_true")
     ap.add_argument("--recalibrate-every", type=float, default=None)
+    ap.add_argument("--trace", default=None, metavar="PREFIX",
+                    help="record a request-lifecycle trace (DESIGN.md "
+                         "§15): writes PREFIX.jsonl + PREFIX.chrome.json "
+                         "(Perfetto-loadable) and verifies the span "
+                         "conservation law")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -283,6 +312,7 @@ def main(argv=None):
         t_cache_per_row=args.t_cache_per_row,
         shards=args.shards,
         t_shard_merge=args.t_shard_merge,
+        trace=args.trace,
         seed=args.seed,
     )
     print(json.dumps(s, indent=2, default=float))

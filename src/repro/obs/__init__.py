@@ -1,0 +1,20 @@
+"""Observability subsystem (DESIGN.md §15): request-lifecycle tracing,
+unified metrics registry, trace export, and latency attribution.
+
+Everything here rides the deterministic :class:`~repro.serving.clock.
+VirtualClock`, so traces are bit-reproducible: same seed, same bytes.
+"""
+from repro.obs.analyze import (attribution, check_conservation,
+                               format_attribution)
+from repro.obs.export import export_trace, write_chrome_trace, write_jsonl
+from repro.obs.metrics import (STALE_AGE_EDGES, FixedHistogram,
+                               MetricsRegistry, ScanMetrics, percentile)
+from repro.obs.trace import BACKGROUND, NULL_TRACER, NullTracer, Tracer
+
+__all__ = [
+    "Tracer", "NullTracer", "NULL_TRACER", "BACKGROUND",
+    "MetricsRegistry", "FixedHistogram", "ScanMetrics", "percentile",
+    "STALE_AGE_EDGES",
+    "export_trace", "write_jsonl", "write_chrome_trace",
+    "check_conservation", "attribution", "format_attribution",
+]

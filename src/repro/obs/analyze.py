@@ -1,0 +1,153 @@
+"""Critical-path decomposition + latency attribution (DESIGN.md §15).
+
+:func:`check_conservation` proves the conservation law for a finished
+run: every completed request's request-scoped spans — sorted by start
+time — tile ``[rec.arrival, rec.t_done]`` with NO gap and NO overlap,
+every boundary compared with exact float ``==``. Because the segments
+tile the interval exactly, their summed duration telescopes:
+``sum(t1_i - t0_i) = t_last - t_first = rec.t_done - rec.arrival``,
+which is *bit-for-bit* the expression the engine used to compute
+``rec.latency`` — so the spans sum exactly (``==``, not ``≈``) to the
+recorded latency. (Summing the float durations naively would NOT
+telescope exactly — float addition is not associative — which is why
+the law is stated, and checked, as exact tiling.)
+
+:func:`attribution` then answers *where the time went*: per-segment
+p50/p99 (shared :func:`~repro.obs.metrics.percentile`) split by request
+class — pure cache hits (``remote_calls == 0``), federated
+(``peer_transfers > 0``), and origin misses — the trace-derived
+replacement for the engine's hand-rolled ``hitpath_*`` means.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Mapping
+
+from repro.obs.metrics import percentile
+from repro.obs.trace import T0, T1, Tracer
+
+
+def _records_by_key(records) -> dict[tuple[int, int], object]:
+    """Normalize records to ``{(region, rid): rec}``. Accepts a plain
+    list (solo engine ⇒ region 0) or a ``{region: [recs]}`` mapping
+    (federation — per-region workloads reuse rid ranges, so rid alone
+    is not a key)."""
+    if isinstance(records, Mapping):
+        return {
+            (int(region), r.rid): r
+            for region, recs in records.items() for r in recs
+        }
+    return {(0, r.rid): r for r in records}
+
+
+def check_conservation(tracer: Tracer, records) -> list[str]:
+    """Return a list of violations (empty ⇒ the law holds).
+
+    Checked per completed request, all comparisons exact float ``==``:
+
+    1. the request has spans at all;
+    2. the first span starts at ``rec.arrival``;
+    3. each span ends exactly where the next begins (zero-duration
+       markers tile trivially);
+    4. the last span ends at ``rec.t_done``;
+    5. the telescoped total ``t_last - t_first`` equals ``rec.latency``.
+    """
+    by_req = tracer.request_spans()
+    violations: list[str] = []
+    for key, rec in _records_by_key(records).items():
+        spans = by_req.get(key)
+        tag = f"region {key[0]} rid {key[1]}"
+        if not spans:
+            violations.append(f"{tag}: no spans recorded")
+            continue
+        spans = sorted(spans, key=lambda s: (s[T0], s[T1]))
+        if spans[0][T0] != rec.arrival:
+            violations.append(
+                f"{tag}: first span {spans[0][1]} starts at "
+                f"{spans[0][T0]!r} != arrival {rec.arrival!r}"
+            )
+        for a, b in zip(spans, spans[1:]):
+            if a[T1] != b[T0]:
+                kind = "gap" if a[T1] < b[T0] else "overlap"
+                violations.append(
+                    f"{tag}: {kind} between {a[1]} (ends {a[T1]!r}) and "
+                    f"{b[1]} (starts {b[T0]!r})"
+                )
+        if spans[-1][T1] != rec.t_done:
+            violations.append(
+                f"{tag}: last span {spans[-1][1]} ends at "
+                f"{spans[-1][T1]!r} != t_done {rec.t_done!r}"
+            )
+        if spans[-1][T1] - spans[0][T0] != rec.latency:
+            violations.append(
+                f"{tag}: telescoped span total "
+                f"{spans[-1][T1] - spans[0][T0]!r} != latency "
+                f"{rec.latency!r}"
+            )
+    return violations
+
+
+def _req_class(rec) -> str:
+    if rec.remote_calls == 0:
+        return "hit"
+    if rec.peer_transfers > 0:
+        return "federated"
+    return "miss"
+
+
+def attribution(tracer: Tracer, records) -> dict:
+    """Queueing-delay attribution: per request class, per span name,
+    the count / total seconds / p50 / p99 of **per-request time in that
+    segment** (a request's multiple rounds of, say, ``judge_queue_wait``
+    are summed before the quantile — the unit of the paper's Fig 11 is
+    the request, not the span)."""
+    by_req = tracer.request_spans()
+    recs = _records_by_key(records)
+    # class -> name -> list of per-request summed durations
+    acc: dict[str, dict[str, list[float]]] = {}
+    lat: dict[str, list[float]] = {}
+    for key, rec in recs.items():
+        cls = _req_class(rec)
+        lat.setdefault(cls, []).append(rec.latency)
+        per_name: dict[str, float] = {}
+        for s in by_req.get(key, ()):
+            per_name[s[1]] = per_name.get(s[1], 0.0) + (s[T1] - s[T0])
+        slot = acc.setdefault(cls, {})
+        for name, d in per_name.items():
+            slot.setdefault(name, []).append(d)
+    out: dict[str, dict] = {}
+    for cls in sorted(acc):
+        segs = {}
+        for name in sorted(acc[cls]):
+            ds = acc[cls][name]
+            segs[name] = {
+                "n": len(ds),
+                "total_s": float(sum(ds)),
+                "p50": percentile(ds, 50),
+                "p99": percentile(ds, 99),
+            }
+        out[cls] = {
+            "n_requests": len(lat[cls]),
+            "latency_p50": percentile(lat[cls], 50),
+            "latency_p99": percentile(lat[cls], 99),
+            "segments": segs,
+        }
+    return out
+
+
+def format_attribution(report: Mapping) -> str:
+    """Human-readable attribution table (one block per request class)."""
+    lines = []
+    for cls, blk in report.items():
+        lines.append(
+            f"[{cls}] n={blk['n_requests']} "
+            f"latency p50={blk['latency_p50']:.4f}s "
+            f"p99={blk['latency_p99']:.4f}s"
+        )
+        lines.append(f"  {'segment':<18}{'n':>6}{'total_s':>10}"
+                     f"{'p50':>9}{'p99':>9}")
+        for name, seg in blk["segments"].items():
+            lines.append(
+                f"  {name:<18}{seg['n']:>6}{seg['total_s']:>10.3f}"
+                f"{seg['p50']:>9.4f}{seg['p99']:>9.4f}"
+            )
+    return "\n".join(lines)

@@ -1,0 +1,72 @@
+"""Trace export: JSONL + Chrome trace-event JSON (DESIGN.md §15).
+
+Both writers are byte-deterministic: spans are written in the tracer's
+emission order (which is clock-event order, itself deterministic),
+every ``json.dumps`` pins ``sort_keys=True`` and compact separators,
+and floats serialize via Python's ``repr`` (shortest round-trip form) —
+so same seed ⇒ byte-identical files, and a trace diff IS a regression
+signal.
+
+The Chrome file loads directly in Perfetto (https://ui.perfetto.dev →
+"Open trace file") or ``chrome://tracing``: one process row per region,
+one thread row per request id, complete events (``ph: "X"``) with
+microsecond timestamps.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+from repro.obs.trace import BACKGROUND, Tracer
+
+
+def write_jsonl(tracer: Tracer, path: str) -> str:
+    """One span per line: ``{"rid", "name", "t0", "t1", "dur", "region",
+    "tag"}`` (tag omitted when absent)."""
+    with open(path, "w") as f:
+        for rid, name, t0, t1, region, tag in tracer.spans:
+            row = {
+                "rid": rid, "name": name, "t0": t0, "t1": t1,
+                "dur": t1 - t0, "region": region,
+            }
+            if tag is not None:
+                row["tag"] = tag
+            f.write(json.dumps(row, sort_keys=True,
+                               separators=(",", ":")) + "\n")
+    return path
+
+
+def write_chrome_trace(tracer: Tracer, path: str) -> str:
+    """Chrome trace-event JSON array: ``pid`` = region, ``tid`` = rid
+    (background spans land on a dedicated ``tid``), times in µs."""
+    events = []
+    for rid, name, t0, t1, region, tag in tracer.spans:
+        ev = {
+            "name": name,
+            "ph": "X",
+            "ts": t0 * 1e6,
+            "dur": (t1 - t0) * 1e6,
+            "pid": region,
+            "tid": rid if rid != BACKGROUND else 999999,
+            "args": {} if tag is None else {"tag": tag},
+        }
+        events.append(ev)
+    meta = [
+        {"name": "process_name", "ph": "M", "pid": pid,
+         "args": {"name": f"region {pid}"}}
+        for pid in sorted({s[4] for s in tracer.spans})
+    ]
+    with open(path, "w") as f:
+        json.dump({"traceEvents": meta + events,
+                   "displayTimeUnit": "ms"},
+                  f, sort_keys=True, separators=(",", ":"))
+    return path
+
+
+def export_trace(tracer: Tracer, prefix: str) -> dict[str, str]:
+    """Write both formats next to each other:
+    ``<prefix>.jsonl`` + ``<prefix>.chrome.json``."""
+    return {
+        "jsonl": write_jsonl(tracer, prefix + ".jsonl"),
+        "chrome": write_chrome_trace(tracer, prefix + ".chrome.json"),
+    }

@@ -37,6 +37,9 @@ from repro.core.semantic_element import ttl_from_staticity
 from repro.core.recalibrate import EvalRecord, recalibrate
 from repro.data.workloads import Request
 from repro.data.world import SemanticWorld
+from repro.obs.metrics import (STALE_AGE_EDGES, FixedHistogram,
+                               MetricsRegistry, percentile)
+from repro.obs.trace import NULL_TRACER
 from repro.serving.clock import VirtualClock
 from repro.serving.gpu import GPU, GPUConfig, judge_batch_tokens
 from repro.serving.remote import RemoteDataService
@@ -190,6 +193,7 @@ class Engine:
         router=None,
         region_id: int = 0,
         freshness=None,
+        tracer=None,
     ):
         self.world = world
         self.requests = requests
@@ -209,8 +213,14 @@ class Engine:
         # change-feed watches + refresh-ahead timers, and cache hits are
         # checked against the world's CURRENT knowledge version.
         self.freshness = freshness
+        # Observability seam (DESIGN.md §15): span tracing + the unified
+        # metrics registry. The tracer only *records* virtual instants
+        # the event flow already computes — it never pushes clock events
+        # — so a traced run is bit-identical in virtual time to an
+        # untraced one, and NULL_TRACER makes the disabled path free.
+        self.trace = tracer if tracer is not None else NULL_TRACER
         self.stale_hits = 0
-        self.stale_ages: list[float] = []
+        self.stale_age_hist = FixedHistogram(STALE_AGE_EDGES)
         self.rng = np.random.default_rng(self.cfg.seed)
         self.prefetcher = MarkovPrefetcher(
             confidence=self.cfg.prefetch_confidence
@@ -231,6 +241,124 @@ class Engine:
         self._done = 0
         self._warm_cut = int(len(requests) * self.cfg.warmup_frac)
         self._warm_snap = None
+        self.metrics = MetricsRegistry()
+        self._register_metrics()
+        if self.trace.enabled:
+            # bind the background-span emitters (holder-side lease
+            # validation, refresh fetches, invalidation drops) — only
+            # when tracing, so untraced construction is untouched
+            if self.cache is not None:
+                self.cache.seri.pipeline.bind_tracer(
+                    self.trace, self.clock, self.region_id
+                )
+            if self.freshness is not None:
+                self.freshness.bind_tracer(self.trace, self.region_id)
+
+    @property
+    def stale_ages(self) -> list[float]:
+        """Legacy name: raw stale-age samples, now held by the §15
+        FixedHistogram (which needs the raw values for a bit-identical
+        mean)."""
+        return self.stale_age_hist.values
+
+    def _register_metrics(self) -> None:
+        """Populate the MetricsRegistry (DESIGN.md §15) with *pull*
+        collectors over the existing counter objects. Pull-based means
+        every increment site keeps its exact legacy code path — the
+        registry observes state at ``snapshot()`` time — which is what
+        lets ``summary()`` be rebuilt on top of the registry while
+        staying byte-identical. Collectors for absent components return
+        ``{}``, so the snapshot's key set reflects the engine's actual
+        configuration."""
+        reg = self.metrics
+        reg.register("engine", lambda: {
+            "stale_hits": self.stale_hits,
+            "stale_age_mean": self.stale_age_hist.mean,
+            "stale_age_hist": self.stale_age_hist.to_dict(),
+            "recal_cost": self.recal_cost,
+        })
+        reg.register("remote", lambda: {
+            "calls": self.remote.calls,
+            "attempts": self.remote.attempts,
+            "retries": self.remote.retries,
+            "total_cost": self.remote.total_cost,
+        })
+        reg.register("gpu", lambda: {
+            "n_chips": self.gpu.n_chips,
+            "agent_lane_tokens": float(self.gpu.agent.busy_tokens),
+            "judge_lane_tokens": float(self.gpu.judge.busy_tokens),
+        })
+
+        def cache_ns():
+            if self.cache is None:
+                return {}
+            d = dataclasses.asdict(self.cache.stats)
+            d["items"] = len(self.cache)
+            return d
+
+        def scan_ns():
+            # ScanMetrics fields (batch-granularity caveats documented
+            # on the dataclass): total_rows / total_max_shard_rows feed
+            # the summary's rows_scanned / rows_scanned_max_shard
+            if self.cache is None:
+                return {}
+            return dataclasses.asdict(self.cache.scan)
+
+        def pipeline_ns():
+            if self.cache is None:
+                return {}
+            pipe = self.cache.seri.pipeline
+            d = dataclasses.asdict(pipe.stats)
+            d["band_width"] = (float(pipe.band.width)
+                               if pipe.band is not None else 0.0)
+            d["base_tokens"] = float(pipe.base_tokens)
+            return d
+
+        def shard_ns():
+            if self.cache is None:
+                return {}
+            shards = getattr(self.cache, "stage1_shards", 1)
+            if shards <= 1:
+                return {}
+            rt = self.cache.seri.index.router
+            reb, mig, chunks = (rt.rebalances, rt.migrated_rows,
+                                rt.migration_chunks)
+            wix = getattr(self.cache, "warm", None)
+            if wix is not None and wix.index.router is not None:
+                wrt = wix.index.router
+                reb += wrt.rebalances
+                mig += wrt.migrated_rows
+                chunks += wrt.migration_chunks
+            return {"shards": shards, "rebalances": reb,
+                    "migrated_rows": mig, "migration_chunks": chunks}
+
+        def tier_ns():
+            ts = getattr(self.cache, "tier_stats", None)
+            if ts is None:
+                return {}
+            d = dataclasses.asdict(ts)
+            d["warm_items"] = len(self.cache.warm)
+            d["warm_bytes"] = self.cache.warm.usage
+            return d
+
+        def freshness_ns():
+            if self.freshness is None:
+                return {}
+            return dataclasses.asdict(self.freshness.stats)
+
+        def exact_ns():
+            if self.exact is None:
+                return {}
+            return {"hits": self.exact.hits,
+                    "lookups": self.exact.lookups}
+
+        reg.register("cache", cache_ns)
+        reg.register("scan", scan_ns)
+        reg.register("pipeline", pipeline_ns)
+        reg.register("shard", shard_ns)
+        reg.register("tier", tier_ns)
+        reg.register("freshness", freshness_ns)
+        reg.register("exact", exact_ns)
 
     # ------------------------------------------------------------ events
 
@@ -282,6 +410,8 @@ class Engine:
 
         def think_done(now):
             st.rec.agent_time += now - t0
+            self.trace.span(st.rec.rid, "agent_think", t0, now,
+                            self.region_id)
             self._tool_call(st)
 
         self._submit(self.gpu.agent, self.cfg.think_tokens, think_done)
@@ -358,6 +488,17 @@ class Engine:
         if shards > 1:
             t_scan += self.cfg.t_shard_merge
         self._stage1_busy_until = now + t_scan
+        if self.trace.enabled:
+            # stage1_queue_wait = tool-call arrival -> pass opening;
+            # stage1_scan = the pass itself (fixed host cost + optional
+            # RTT + scan streaming). scan_end is the exact instant the
+            # deferred _scan_resolve fires (same float expression).
+            scan_end = now + t_scan
+            for bst, _, t_arr in batch:
+                self.trace.span(bst.rec.rid, "stage1_queue_wait", t_arr,
+                                open_t, self.region_id)
+                self.trace.span(bst.rec.rid, "stage1_scan", open_t,
+                                scan_end, self.region_id)
         if self._stage1_pending:  # next pass opens as the scan retires
             self._stage1_open = now + t_scan
             self._push(self._stage1_open + self._stage1_latency(),
@@ -385,6 +526,11 @@ class Engine:
                 continue
             self._stage1_resolve(st, q, t0, cands, sims, now)
         if deferred:
+            if self.trace.enabled:
+                for dst, _, _, _, _ in deferred:
+                    self.trace.span(dst.rec.rid, "warm_consult", now,
+                                    now + self.cfg.t_cache_warm,
+                                    self.region_id)
             self._push(
                 now + self.cfg.t_cache_warm,
                 lambda now2, d=deferred: self._warm_resolve(d, now2),
@@ -442,6 +588,8 @@ class Engine:
         if self.cache.seri.pipeline.admit(
             sims, self.cache.seri.tau_sim
         ) == "bypass":
+            self.trace.marker(st.rec.rid, "band_bypass", now,
+                              self.region_id)
             se = cands[0]
             key, value = se.key, se.value
             self._note_stale(se, now)
@@ -475,7 +623,7 @@ class Engine:
             st=st, q=q, cands=cands, t0=self._now,
             keys=[c.key for c in cands], values=[c.value for c in cands],
             sims=[float(s) for s in sims],
-            done=False, timed_out=False,
+            done=False, timed_out=False, t_dispatch=None,
         )
         self._judge_backlog.append(entry)
         self._push(self._now + self.cfg.judge_timeout,
@@ -488,6 +636,20 @@ class Engine:
             return
         entry["timed_out"] = True
         self.cache.stats.misses += 1
+        if self.trace.enabled:
+            # close the judge spans at the timeout instant: the request
+            # proceeds as a miss NOW; the (abandoned) batch result is
+            # attributed to nothing when it lands later
+            rid = entry["st"].rec.rid
+            td = entry["t_dispatch"]
+            if td is None:
+                self.trace.span(rid, "judge_queue_wait", entry["t0"],
+                                self._now, self.region_id, "timeout")
+            else:
+                self.trace.span(rid, "judge_queue_wait", entry["t0"],
+                                td, self.region_id)
+                self.trace.span(rid, "judge_compute", td, self._now,
+                                self.region_id, "timeout")
         self._go_remote(entry["st"])  # deferred validation = miss (§4.4)
 
     def _dispatch_judges(self):
@@ -505,6 +667,8 @@ class Engine:
                 batch.append(e)
             if not batch:
                 return
+            for e in batch:
+                e["t_dispatch"] = self._now
             # cost of the micro-batch: model-config-derived via the
             # pipeline unless the config pins a legacy hand-set base
             if self.cfg.judge_tokens is None:
@@ -540,6 +704,11 @@ class Engine:
             off += m
             st = e["st"]
             st.rec.cache_time += now - e["t0"]
+            if self.trace.enabled:
+                self.trace.span(st.rec.rid, "judge_queue_wait", e["t0"],
+                                e["t_dispatch"], self.region_id)
+                self.trace.span(st.rec.rid, "judge_compute",
+                                e["t_dispatch"], now, self.region_id)
             for key, val, s, sim in zip(e["keys"], e["values"], sc,
                                         e["sims"]):
                 self.eval_log.append(
@@ -570,7 +739,7 @@ class Engine:
         )
         if se.version < cur:
             self.stale_hits += 1
-            self.stale_ages.append(now - se.fetched_at)
+            self.stale_age_hist.add(now - se.fetched_at)
 
     def _go_remote(self, st: _ReqState):
         q = st.req.query_for_round(st.round)
@@ -585,6 +754,8 @@ class Engine:
             latency_mult=self.world.latency_mult(q),
             cost_mult=self.world.cost_mult(q),
         )
+        self.trace.span(st.rec.rid, "origin_fetch", t0, out.finish,
+                        self.region_id)
         self._push(
             out.finish,
             lambda now: self.remote_done(st, q, t0, now, value=None,
@@ -697,6 +868,8 @@ class Engine:
 
             def answered(now):
                 st.rec.agent_time += now - t0
+                self.trace.span(st.rec.rid, "agent_answer", t0, now,
+                                self.region_id)
                 self._complete(st)
 
             self._submit(self.gpu.agent, self.cfg.answer_tokens, answered)
@@ -714,17 +887,13 @@ class Engine:
         self._active -= 1
         self._done += 1
         if self._done == self._warm_cut and self._warm_snap is None:
-            import copy as _copy
+            # warm-up boundary: one registry snapshot (§15) — summary()
+            # subtracts it via MetricsRegistry.delta for the
+            # steady-state fields
             self._warm_snap = {
                 "n_records": len(self.records),
-                "remote_calls": self.remote.calls,
-                "remote_attempts": self.remote.attempts,
-                "remote_retries": self.remote.retries,
-                "remote_cost": self.remote.total_cost,
                 "t": self._now,
-                "cache": _copy.copy(self.cache.stats) if self.cache else None,
-                "exact": (self.exact.hits, self.exact.lookups)
-                if self.exact else None,
+                "metrics": self.metrics.snapshot(),
             }
         if self.cfg.closed_loop is not None:
             self._dispatch_closed_loop()
@@ -801,28 +970,26 @@ class Engine:
         recs = self.records[snap["n_records"]:] if snap else self.records
         if not recs:
             return {}
+        # one registry snapshot is THE source for every counter-derived
+        # field below (DESIGN.md §15) — the legacy keys are projections
+        # of "namespace.key" entries, byte-identical by construction
+        # because the collectors read the same counters the old code
+        # read directly. Steady-state fields subtract the warm-up
+        # snapshot through the registry's delta.
+        m = self.metrics.snapshot()
+        d = MetricsRegistry.delta(m, snap["metrics"] if snap else {})
         t_end = max(r.t_done for r in recs)
         t_start = snap["t"] if snap else min(r.arrival for r in recs)
         makespan = max(t_end - t_start, 1e-9)
         lat = np.array([r.latency for r in recs])
-        gpu_hours = makespan / 3600 * self.gpu.n_chips
-        d_calls = self.remote.calls - (snap["remote_calls"] if snap else 0)
-        d_attempts = self.remote.attempts - (
-            snap["remote_attempts"] if snap else 0
-        )
-        d_retries = self.remote.retries - (
-            snap["remote_retries"] if snap else 0
-        )
-        d_cost = self.remote.total_cost - (
-            snap["remote_cost"] if snap else 0.0
-        )
+        gpu_hours = makespan / 3600 * m["gpu.n_chips"]
         out = {
             "mode": self.mode,
             "n": len(recs),
             "throughput_rps": len(recs) / makespan,
             "latency_mean": float(lat.mean()),
-            "latency_p50": float(np.percentile(lat, 50)),
-            "latency_p99": float(np.percentile(lat, 99)),
+            "latency_p50": percentile(lat, 50),
+            "latency_p99": percentile(lat, 99),
             "agent_time_mean": float(np.mean([r.agent_time for r in recs])),
             "cache_time_mean": float(np.mean([r.cache_time for r in recs])),
             "remote_time_mean": float(np.mean([r.remote_time for r in recs])),
@@ -830,10 +997,11 @@ class Engine:
                 np.mean([r.remote_calls for r in recs])
             ),
             "peer_transfers": int(sum(r.peer_transfers for r in recs)),
-            "api_calls": d_calls,
-            "api_attempts": d_attempts,
-            "retry_ratio": d_retries / d_attempts if d_attempts else 0.0,
-            "api_cost": d_cost,
+            "api_calls": d["remote.calls"],
+            "api_attempts": d["remote.attempts"],
+            "retry_ratio": (d["remote.retries"] / d["remote.attempts"]
+                            if d["remote.attempts"] else 0.0),
+            "api_cost": d["remote.total_cost"],
             "gpu_cost": gpu_hours * self.cfg.gpu_cost_per_hour,
             "em": float(np.mean([r.em_correct for r in recs])),
             "info_accuracy": float(np.mean([r.info_correct for r in recs])),
@@ -853,28 +1021,29 @@ class Engine:
                 np.mean([r.cache_time for r in hit_recs])
             )
         if self.mode in ("cortex", "cortex-nojudge") and self.cache is not None:
-            s = self.cache.stats
-            if snap and snap.get("cache") is not None:
-                c0 = snap["cache"]
-                lk = s.lookups - c0.lookups
-                ht = s.hits - c0.hits
-                out["hit_rate_steady"] = ht / lk if lk else 0.0
+            if snap:
+                lk = d["cache.lookups"]
+                out["hit_rate_steady"] = (
+                    d["cache.hits"] / lk if lk else 0.0
+                )
             out.update(
-                hit_rate=s.hit_rate, evictions=s.evictions,
-                ttl_evictions=s.ttl_evictions,
-                invalidations=s.invalidations,
-                prefetch_inserts=s.prefetch_inserts,
-                prefetch_hits=s.prefetch_hits,
-                judge_calls=s.judge_calls,
-                cache_items=len(self.cache),
+                hit_rate=(m["cache.hits"] / m["cache.lookups"]
+                          if m["cache.lookups"] else 0.0),
+                evictions=m["cache.evictions"],
+                ttl_evictions=m["cache.ttl_evictions"],
+                invalidations=m["cache.invalidations"],
+                prefetch_inserts=m["cache.prefetch_inserts"],
+                prefetch_hits=m["cache.prefetch_hits"],
+                judge_calls=m["cache.judge_calls"],
+                cache_items=m["cache.items"],
                 # stage-1 scan volume (DESIGN.md §12): total rows the
                 # stage-1 passes touched and the per-lookup average —
                 # the sublinearity of the clustered index read straight
                 # off the summary
-                rows_scanned=self.cache.rows_scanned,
+                rows_scanned=m["scan.total_rows"],
                 rows_per_lookup=(
-                    self.cache.rows_scanned / s.lookups if s.lookups
-                    else 0.0
+                    m["scan.total_rows"] / m["cache.lookups"]
+                    if m["cache.lookups"] else 0.0
                 ),
                 # judge economics (DESIGN.md §14): the per-job token
                 # cost actually charged (model-config-derived unless the
@@ -885,43 +1054,32 @@ class Engine:
                 judge_tokens_base=float(
                     self.cfg.judge_tokens
                     if self.cfg.judge_tokens is not None
-                    else self.cache.seri.pipeline.base_tokens
+                    else m["pipeline.base_tokens"]
                 ),
-                judge_lane_tokens=float(self.gpu.judge.busy_tokens),
+                judge_lane_tokens=m["gpu.judge_lane_tokens"],
             )
-            pipe = self.cache.seri.pipeline
-            if pipe.band is not None and pipe.band.width > 0:
+            if m["pipeline.band_width"] > 0:
                 # admission band (§14). Keyed OFF at width 0 so the
                 # width-0 engine's summary stays byte-identical to the
                 # band-free engine (the sweep's bit-identity gate).
                 out.update(
-                    band_width=float(pipe.band.width),
-                    band_bypass_hits=pipe.stats.bypass_hits,
-                    band_judged=pipe.stats.band_judged,
-                    lease_validations=pipe.stats.lease_validations,
-                    lease_rejections=pipe.stats.lease_rejections,
+                    band_width=m["pipeline.band_width"],
+                    band_bypass_hits=m["pipeline.bypass_hits"],
+                    band_judged=m["pipeline.band_judged"],
+                    lease_validations=m["pipeline.lease_validations"],
+                    lease_rejections=m["pipeline.lease_rejections"],
                 )
-            shards = getattr(self.cache, "stage1_shards", 1)
-            if shards > 1:
-                # mesh-sharded stage 1 (§13). Keyed OFF when unsharded
-                # so pre-§13 summaries (and the bit-identity gates that
-                # compare them) are byte-identical.
-                rt = self.cache.seri.index.router
-                reb, mig, chunks = (rt.rebalances, rt.migrated_rows,
-                                    rt.migration_chunks)
-                wix = getattr(self.cache, "warm", None)
-                if wix is not None and wix.index.router is not None:
-                    wrt = wix.index.router
-                    reb += wrt.rebalances
-                    mig += wrt.migrated_rows
-                    chunks += wrt.migration_chunks
+            if "shard.shards" in m:
+                # mesh-sharded stage 1 (§13). The shard collector
+                # returns {} when unsharded, so pre-§13 summaries (and
+                # the bit-identity gates that compare them) are
+                # byte-identical.
                 out.update(
-                    stage1_shards=shards,
-                    rows_scanned_max_shard=(
-                        self.cache.rows_scanned_max_shard),
-                    shard_rebalances=reb,
-                    shard_migrated_rows=mig,
-                    shard_migration_chunks=chunks,
+                    stage1_shards=m["shard.shards"],
+                    rows_scanned_max_shard=m["scan.total_max_shard_rows"],
+                    shard_rebalances=m["shard.rebalances"],
+                    shard_migrated_rows=m["shard.migrated_rows"],
+                    shard_migration_chunks=m["shard.migration_chunks"],
                 )
             # freshness accounting (DESIGN.md §11): every cache-served
             # value is version-checked, so these are exact, not sampled.
@@ -935,45 +1093,33 @@ class Engine:
             served = sum(
                 r.cache_hits + r.peer_transfers for r in self.records
             )
-            out["stale_hits"] = self.stale_hits
+            out["stale_hits"] = m["engine.stale_hits"]
             out["stale_hit_rate"] = (
-                self.stale_hits / served if served else 0.0
+                m["engine.stale_hits"] / served if served else 0.0
             )
-            edges = (30.0, 60.0, 120.0, 300.0, 600.0, 1800.0)
-            hist = {}
-            lo = 0.0
-            for hi in edges:
-                hist[f"{lo:g}-{hi:g}"] = sum(
-                    1 for a in self.stale_ages if lo <= a < hi
-                )
-                lo = hi
-            hist[f"{lo:g}+"] = sum(1 for a in self.stale_ages if a >= lo)
-            out["stale_age_hist"] = hist
-            out["stale_age_mean"] = (
-                float(np.mean(self.stale_ages)) if self.stale_ages else 0.0
-            )
+            out["stale_age_hist"] = m["engine.stale_age_hist"]
+            out["stale_age_mean"] = m["engine.stale_age_mean"]
             if self.freshness is not None:
-                fs = self.freshness.stats
                 out.update(
-                    refreshes=fs.refreshes,
-                    refresh_cost=fs.refresh_cost,
-                    refresh_skipped=fs.refresh_skipped,
-                    feed_notices=fs.notices,
-                    stale_found=fs.stale_found,
+                    refreshes=m["freshness.refreshes"],
+                    refresh_cost=m["freshness.refresh_cost"],
+                    refresh_skipped=m["freshness.refresh_skipped"],
+                    feed_notices=m["freshness.notices"],
+                    stale_found=m["freshness.stale_found"],
                 )
-            ts = getattr(self.cache, "tier_stats", None)
-            if ts is not None:  # tiered storage (DESIGN.md §10)
+            if "tier.demotions" in m:  # tiered storage (DESIGN.md §10)
                 out.update(
-                    demotions=ts.demotions,
-                    promotions=ts.promotions,
-                    warm_lookups=ts.warm_lookups,
-                    warm_hits=ts.warm_hits,
-                    warm_evictions=ts.warm_evictions,
-                    warm_items=len(self.cache.warm),
-                    warm_bytes=self.cache.warm.usage,
+                    demotions=m["tier.demotions"],
+                    promotions=m["tier.promotions"],
+                    warm_lookups=m["tier.warm_lookups"],
+                    warm_hits=m["tier.warm_hits"],
+                    warm_evictions=m["tier.warm_evictions"],
+                    warm_items=m["tier.warm_items"],
+                    warm_bytes=m["tier.warm_bytes"],
                 )
         elif self.mode == "exact" and self.exact is not None:
-            out.update(hit_rate=self.exact.hit_rate)
+            out.update(hit_rate=(m["exact.hits"] / m["exact.lookups"]
+                                 if m["exact.lookups"] else 0.0))
         else:
             out.update(hit_rate=0.0)
         out["cost_total"] = out["api_cost"] + out["gpu_cost"]

@@ -42,6 +42,7 @@ from repro.core.cache import CortexCache, make_cache
 from repro.core.judge import OracleJudge
 from repro.data.workloads import Request
 from repro.data.world import SemanticWorld
+from repro.obs.metrics import percentile
 from repro.serving.clock import VirtualClock
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.gpu import GPU, GPUConfig
@@ -208,6 +209,14 @@ class Federation:
             t_arrive = now + rtt / 2.0 + lease.size / self.bandwidth
             if lease.expires_at > t_arrive:
                 state["decided"] = True
+                # §15 spans: broadcast -> winning response, then the
+                # response half-RTT + serialization until the value
+                # lands (t_arrive is the exact remote_done instant)
+                if engine.trace.enabled:
+                    engine.trace.span(st.rec.rid, "peek_rtt", t0, now,
+                                      engine.region_id)
+                    engine.trace.span(st.rec.rid, "lease_transfer", now,
+                                      t_arrive, engine.region_id)
                 self.stats.peer_hits += 1
                 self.stats.transfers += 1
                 self.stats.transfer_bytes += lease.size
@@ -232,6 +241,11 @@ class Federation:
                 return
             self.stats.expired_leases += 1
         if state["pending"] == 0:
+            # every sibling NAKed (or leased too close to expiry): the
+            # peek ends with the LAST response; origin fetch starts here
+            if engine.trace.enabled:
+                engine.trace.span(st.rec.rid, "peek_rtt", t0, now,
+                                  engine.region_id, "miss")
             self.stats.peer_misses += 1
             self._origin(engine, st, q, t0)
 
@@ -244,6 +258,11 @@ class Federation:
             latency_mult=engine.world.latency_mult(q),
             cost_mult=engine.world.cost_mult(q),
         )
+        # starts at NOW (== t0 on the no-peering path, the last NAK's
+        # arrival after a failed peek), ends when the fetch lands
+        if engine.trace.enabled:
+            engine.trace.span(st.rec.rid, "origin_fetch", self.clock.now,
+                              out.finish, engine.region_id)
         self.clock.push(
             out.finish,
             lambda now2: engine.remote_done(st, q, t0, now2, value=None,
@@ -287,6 +306,7 @@ class FederationRunner:
         warm_frac: Optional[float] = None,
         cluster=None,  # ClusterConfig -> IVF stage-1 routing (§12)
         freshness=None,  # FreshnessConfig -> per-region managers (§11)
+        tracer=None,  # one obs.Tracer shared by every region (§15)
         seed: int = 0,
     ):
         if topology not in ("local", "peered", "global"):
@@ -430,11 +450,18 @@ class FederationRunner:
                 router=(self.federation if topology == "peered" else None),
                 region_id=region.rid,
                 freshness=region.freshness,
+                tracer=tracer,
             )
 
     @property
     def engines(self) -> list[Engine]:
         return [r.engine for r in self.regions]
+
+    def records_by_region(self) -> dict[int, list]:
+        """Completed records keyed by region id — the shape
+        ``obs.analyze`` wants, since per-region workloads reuse rid
+        ranges (the unique request key is ``(region, rid)``)."""
+        return {r.rid: r.engine.records for r in self.regions}
 
     def run(self) -> dict:
         for e in self.engines:
@@ -467,7 +494,8 @@ class FederationRunner:
             "topology": self.topology,
             "n": len(recs),
             "latency_mean": float(lat.mean()),
-            "latency_p99": float(np.percentile(lat, 99)),
+            "latency_p50": percentile(lat, 50),
+            "latency_p99": percentile(lat, 99),
             "remote_time_mean": float(
                 np.mean([r.remote_time for r in recs])
             ),

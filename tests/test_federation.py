@@ -11,6 +11,7 @@ from repro.core.cache import make_cache
 from repro.core.judge import OracleJudge
 from repro.data.workloads import region_workloads
 from repro.data.world import SemanticWorld
+from repro.obs.trace import NULL_TRACER
 from repro.serving.clock import VirtualClock
 from repro.serving.engine import EngineConfig
 from repro.serving.federation import (
@@ -33,6 +34,7 @@ class _StubEngine:
         self.remote = remote
         self.region_id = region_id
         self.results = []
+        self.trace = NULL_TRACER  # router emits §15 spans when armed
 
     def remote_done(self, st, q, t0, now, **kw):
         self.results.append(dict(q=q, t0=t0, now=now, **kw))

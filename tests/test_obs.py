@@ -1,0 +1,239 @@
+"""Observability layer (DESIGN.md §15): tracer, registry, conservation.
+
+The §15 contract has four legs, each tested here:
+
+* **conservation** — every completed request's spans tile
+  ``[arrival, t_done]`` with exact float ``==`` at every boundary, so
+  the telescoped total equals ``rec.latency`` bit-for-bit — on plain,
+  tiered/banded, and federated runs;
+* **neutrality** — tracing is observational: a traced run's summary is
+  byte-identical to the untraced run at the same seed;
+* **determinism** — same seed ⇒ byte-identical JSONL and Chrome-trace
+  artifacts;
+* **registry** — ``summary()`` is rebuilt on ``MetricsRegistry``
+  snapshots without changing a single legacy key.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.data.workloads import region_workloads
+from repro.data.world import SemanticWorld
+from repro.launch.serve import run_once
+from repro.obs.analyze import (attribution, check_conservation,
+                               format_attribution)
+from repro.obs.export import export_trace
+from repro.obs.metrics import (FixedHistogram, MetricsRegistry, ScanMetrics,
+                               percentile)
+from repro.obs.trace import BACKGROUND, NULL_TRACER, Tracer
+from repro.serving.federation import FederationRunner
+
+
+# ---------------------------------------------------------------- helpers
+
+@dataclasses.dataclass
+class _Rec:
+    rid: int
+    arrival: float
+    t_done: float
+    latency: float
+    remote_calls: int = 0
+    peer_transfers: int = 0
+
+
+# ------------------------------------------------------------- unit tests
+
+def test_percentile_matches_numpy_linear_default():
+    vals = [0.3, 1.7, 0.02, 9.4, 2.2, 2.2, 0.5]
+    for q in (0, 25, 50, 99, 100):
+        assert percentile(vals, q) == float(np.percentile(vals, q))
+
+
+def test_fixed_histogram_legacy_keys_and_mean():
+    h = FixedHistogram((30.0, 60.0))
+    for v in (0.0, 29.999, 30.0, 45.0, 60.0, 1e4):
+        h.add(v)
+    assert h.to_dict() == {"0-30": 2, "30-60": 2, "60+": 2}
+    # mean must be np.mean over the RAW values (pairwise summation),
+    # bit-identical to the pre-registry list-based summary code
+    assert h.mean == float(np.mean(h.values))
+    assert len(h) == 6
+    assert FixedHistogram().mean == 0.0
+
+
+def test_scan_metrics_pass_accounting():
+    s = ScanMetrics()
+    s.note_pass(100)                       # unsharded: max shard == rows
+    assert (s.last_rows, s.last_max_shard_rows) == (100, 100)
+    s.note_pass(80, max_shard_rows=50)     # new pass resets last_*
+    s.add_warm_pass(40, max_shard_rows=40) # warm consult folds into it
+    assert (s.last_rows, s.last_max_shard_rows) == (120, 90)
+    assert (s.total_rows, s.total_max_shard_rows) == (220, 190)
+
+
+def test_registry_snapshot_and_delta():
+    reg = MetricsRegistry()
+    state = {"hits": 3, "ratio": 0.5, "hist": {"0-30": 1}, "flag": True}
+    reg.register("cache", lambda: state)
+    reg.register("gpu", lambda: {"chips": 2})
+    assert reg.namespaces() == ["cache", "gpu"]
+    snap = reg.snapshot()
+    assert snap == {"cache.hits": 3, "cache.ratio": 0.5,
+                    "cache.hist": {"0-30": 1}, "cache.flag": True,
+                    "gpu.chips": 2}
+    state["hits"] = 10            # live counters: next snapshot sees it
+    d = MetricsRegistry.delta(reg.snapshot(), snap)
+    assert d["cache.hits"] == 7
+    assert d["gpu.chips"] == 0
+    # non-numerics (dicts, bools) pass through from the current snapshot
+    assert d["cache.hist"] == {"0-30": 1}
+    assert d["cache.flag"] is True
+    # missing base keys count as zero
+    assert MetricsRegistry.delta({"a.x": 4}, {})["a.x"] == 4
+
+
+def test_tracer_groups_by_region_and_rid():
+    tr = Tracer()
+    assert tr.enabled
+    tr.span(7, "stage1_scan", 0.0, 1.0)
+    tr.span(7, "stage1_scan", 0.0, 1.0, region=2)
+    tr.marker(7, "band_bypass", 1.0, region=2, tag="x")
+    tr.span(BACKGROUND, "refresh", 0.0, 5.0)       # background: excluded
+    by_req = tr.request_spans()
+    assert set(by_req) == {(0, 7), (2, 7)}
+    assert len(by_req[(2, 7)]) == 2
+    assert len(tr.spans) == 4
+
+
+def test_null_tracer_is_inert():
+    assert not NULL_TRACER.enabled
+    NULL_TRACER.span(1, "x", 0.0, 1.0)
+    NULL_TRACER.marker(1, "y", 0.0)
+    assert not hasattr(NULL_TRACER, "spans")
+
+
+def test_conservation_checker_names_gaps_overlaps_and_totals():
+    tr = Tracer()
+    tr.span(1, "a", 0.0, 1.0)
+    tr.span(1, "b", 2.0, 3.0)                      # gap 1.0 -> 2.0
+    recs = [_Rec(rid=1, arrival=0.0, t_done=3.0, latency=3.0)]
+    v = check_conservation(tr, recs)
+    assert len(v) == 1 and "gap" in v[0]
+
+    tr = Tracer()
+    tr.span(1, "a", 0.5, 1.0)                      # starts after arrival
+    v = check_conservation(tr, recs)
+    assert any("arrival" in x for x in v)
+    assert any("t_done" not in x or "3.0" in x for x in v)
+
+    v = check_conservation(Tracer(), recs)          # no spans at all
+    assert v == ["region 0 rid 1: no spans recorded"]
+
+    tr = Tracer()
+    tr.span(1, "a", 0.0, 3.0)
+    assert check_conservation(tr, recs) == []       # exact tiling passes
+
+
+# --------------------------------------------- conservation on real runs
+
+def test_conservation_plain_engine(tmp_path):
+    out = run_once(n_requests=120, concurrency=4, seed=3,
+                   trace=str(tmp_path / "t"))
+    assert out["trace_conservation_violations"] == 0
+    assert out["trace_spans"] > 0
+
+
+def test_conservation_tiered_banded_engine(tmp_path):
+    out = run_once(n_requests=120, concurrency=4, warm_frac=0.5,
+                   workload="longtail", tail_len=40, judge_band=0.1,
+                   seed=3, trace=str(tmp_path / "t"))
+    assert out["trace_conservation_violations"] == 0
+
+
+def test_conservation_federation():
+    world = SemanticWorld(n_intents=300, dim=64, seed=5)
+    reqs = region_workloads(world, n_regions=3, n_per_region=60, seed=6)
+    tracer = Tracer()
+    fr = FederationRunner(world=world, region_requests=reqs,
+                          topology="peered", seed=7, tracer=tracer)
+    fr.run()
+    recs = fr.records_by_region()
+    assert check_conservation(tracer, recs) == []
+    # cross-region rid reuse must not alias: every region contributes
+    assert {k[0] for k in tracer.request_spans()} == set(recs)
+
+
+# ------------------------------------------------ neutrality, determinism
+
+def test_traced_run_is_event_neutral(tmp_path):
+    kw = dict(n_requests=120, concurrency=4, warm_frac=0.5,
+              workload="longtail", tail_len=40, judge_band=0.1, seed=3)
+    plain = run_once(**kw)
+    traced = run_once(trace=str(tmp_path / "t"), **kw)
+    for k in ("trace_jsonl", "trace_chrome", "trace_spans",
+              "trace_conservation_violations"):
+        traced.pop(k)
+    assert json.dumps(traced, sort_keys=True, default=float) \
+        == json.dumps(plain, sort_keys=True, default=float)
+
+
+def test_same_seed_traces_are_byte_identical(tmp_path):
+    kw = dict(n_requests=120, concurrency=4, judge_band=0.1, seed=3)
+    a = run_once(trace=str(tmp_path / "a"), **kw)
+    b = run_once(trace=str(tmp_path / "b"), **kw)
+    assert (tmp_path / "a.jsonl").read_bytes() \
+        == (tmp_path / "b.jsonl").read_bytes()
+    assert (tmp_path / "a.chrome.json").read_bytes() \
+        == (tmp_path / "b.chrome.json").read_bytes()
+    assert a["trace_spans"] == b["trace_spans"] > 0
+
+
+def test_export_artifacts_are_well_formed(tmp_path):
+    tr = Tracer()
+    tr.span(1, "stage1_scan", 0.5, 0.75, region=2)
+    tr.marker(BACKGROUND, "invalidation_drop", 1.0, tag="stale")
+    paths = export_trace(tr, str(tmp_path / "t"))
+    rows = [json.loads(l) for l in
+            open(paths["jsonl"]).read().splitlines()]
+    assert rows[0] == {"dur": 0.25, "name": "stage1_scan", "region": 2,
+                       "rid": 1, "t0": 0.5, "t1": 0.75}
+    assert rows[1]["rid"] == BACKGROUND and rows[1]["tag"] == "stale"
+    doc = json.load(open(paths["chrome"]))
+    evs = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+    assert evs[0]["ts"] == 0.5e6 and evs[0]["dur"] == 0.25e6
+    assert evs[0]["pid"] == 2 and evs[0]["tid"] == 1
+    # Perfetto needs metadata process_name events per region
+    assert any(e.get("ph") == "M" for e in doc["traceEvents"])
+
+
+# ------------------------------------------------------------ attribution
+
+def test_attribution_splits_by_request_class():
+    tr = Tracer()
+    tr.span(1, "stage1_scan", 0.0, 1.0)
+    tr.span(1, "stage1_scan", 1.0, 2.0)   # same request, summed pre-quantile
+    tr.span(2, "origin_fetch", 0.0, 4.0)
+    recs = [_Rec(rid=1, arrival=0.0, t_done=2.0, latency=2.0),
+            _Rec(rid=2, arrival=0.0, t_done=4.0, latency=4.0,
+                 remote_calls=1, peer_transfers=1)]
+    rep = attribution(tr, recs)
+    assert set(rep) == {"hit", "federated"}
+    seg = rep["hit"]["segments"]["stage1_scan"]
+    assert seg["n"] == 1 and seg["total_s"] == 2.0 == seg["p50"]
+    assert rep["federated"]["latency_p99"] == 4.0
+    txt = format_attribution(rep)
+    assert "[hit]" in txt and "origin_fetch" in txt
+
+
+# ------------------------------------------------------- registry wiring
+
+def test_summary_keeps_legacy_keys_and_registry_backs_them():
+    out = run_once(n_requests=120, concurrency=4, seed=3)
+    for k in ("latency_p50", "latency_p99", "api_calls", "retry_ratio",
+              "hit_rate", "rows_scanned", "stale_hits", "stale_age_hist",
+              "judge_calls", "gpu_cost"):
+        assert k in out, k
+    assert "trace_jsonl" not in out   # untraced runs carry no trace keys
