@@ -1,0 +1,308 @@
+"""Perf-regression harness over BENCH_*.json artifacts (DESIGN.md §16).
+
+Diffs the BENCH_<name>.json files a benchmark run just produced against
+the committed per-metric baselines under ``benchmarks/baselines/`` and
+fails (exit 1) when any whitelisted metric regresses past its
+direction-aware tolerance:
+
+  PYTHONPATH=src python -m benchmarks.compare \\
+      [--baseline benchmarks/baselines] [--current .] \\
+      [--names tiered,freshness] [--self-test]
+
+Design choices, deliberately conservative:
+
+* Only metrics named in ``RULES`` are compared.  Everything else —
+  wall-clock stamps (``us_per_call`` on kernel rows, ``wall_s``,
+  ``brute_us``/``ivf_us``), free-form counts without a "better"
+  direction (evictions, transfers, refreshes), and metrics added after
+  a baseline was committed — is ignored, so the gate never flakes on
+  machine speed and never blocks a new metric from landing before its
+  baseline does.
+* Every engine-derived metric in RULES is computed in *virtual* time
+  from a seeded discrete-event run, so at equal code it is
+  bit-reproducible; the tolerances exist to absorb intentional
+  behaviour changes that are small enough not to count as regressions.
+  A change past tolerance is exactly the thing this gate exists to
+  surface: fix it or re-baseline deliberately (see README: "read a
+  compare report").
+* Rows are matched by (row name, occurrence index) within a benchmark.
+  A baseline row whose config stamp (seed/shards/nprobe/judge_model/
+  band) disagrees with the current run is *skipped with a warning* —
+  config drift means the numbers answer different questions and a
+  numeric diff would be noise.  A baseline row with no current
+  counterpart is a violation: silently dropping a measured row is how
+  coverage regressions hide.
+
+Exit codes: 0 = all compared metrics within tolerance; 1 = at least
+one regression (or a missing row); 2 = usage/environment error (no
+baseline files, unreadable JSON).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+# metric -> (direction, rel_tol, abs_tol)
+#   direction "higher": regression when current < baseline - tol
+#   direction "lower":  regression when current > baseline + tol
+# with tol = max(abs_tol, rel_tol * |baseline|).
+RULES: dict[str, tuple[str, float, float]] = {
+    # throughput / quality — higher is better
+    "thpt":            ("higher", 0.10, 0.05),
+    "hit":             ("higher", 0.00, 0.02),
+    "hit_steady":      ("higher", 0.00, 0.02),
+    "peer_hit":        ("higher", 0.00, 0.02),
+    "warm_hits":       ("higher", 0.10, 2.0),
+    "recall_at_4":     ("higher", 0.00, 0.01),
+    "em":              ("higher", 0.00, 0.05),
+    "info_acc":        ("higher", 0.00, 0.02),
+    "info_accuracy":   ("higher", 0.00, 0.02),
+    "acc_recovered":   ("higher", 0.00, 0.02),
+    "remote_time_reduction": ("higher", 0.00, 0.02),
+    # latency (virtual-time ms) — lower is better
+    "lat_ms":          ("lower", 0.10, 2.0),
+    "p99_ms":          ("lower", 0.20, 10.0),
+    "remote_ms":       ("lower", 0.10, 2.0),
+    "hitpath_p50_ms":  ("lower", 0.10, 2.0),
+    "hitpath_mean_ms": ("lower", 0.10, 2.0),
+    # spend — lower is better
+    "api":             ("lower", 0.10, 5.0),
+    "api_cost":        ("lower", 0.10, 0.05),
+    "cost":            ("lower", 0.10, 0.05),
+    "refresh_cost":    ("lower", 0.10, 0.05),
+    "judge_calls":     ("lower", 0.15, 10.0),
+    "rows_per_lookup": ("lower", 0.10, 5.0),
+    "scan_ratio":      ("lower", 0.10, 0.02),
+    # freshness — lower is better
+    "stale_rate":      ("lower", 0.00, 0.02),
+    "stale_hits":      ("lower", 0.00, 2.0),
+}
+
+# emit()'s first-class config stamps: a mismatch means the two rows
+# measured different configurations, not different code.
+CONFIG_FIELDS = ("seed", "shards", "nprobe", "judge_model", "band")
+
+
+def load_bench(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _index_rows(rows: list[dict]) -> dict[tuple[str, int], dict]:
+    """Key rows by (name, occurrence index) so repeated names — e.g.
+    per-sweep-point rows — match positionally."""
+    seen: dict[str, int] = {}
+    out = {}
+    for r in rows:
+        k = seen.get(r["name"], 0)
+        seen[r["name"]] = k + 1
+        out[(r["name"], k)] = r
+    return out
+
+
+def compare_rows(bench: str, base_rows: list[dict], cur_rows: list[dict],
+                 out: list[str]) -> list[str]:
+    """Returns violation strings; appends informational lines to out."""
+    violations: list[str] = []
+    cur = _index_rows(cur_rows)
+    n_cmp = 0
+    for key, brow in _index_rows(base_rows).items():
+        name, idx = key
+        label = name if idx == 0 else f"{name}#{idx}"
+        crow = cur.get(key)
+        if crow is None:
+            violations.append(
+                f"{bench}: row {label!r} present in baseline but missing "
+                "from the current run")
+            continue
+        drift = [f for f in CONFIG_FIELDS
+                 if brow.get(f) != crow.get(f)]
+        if drift:
+            out.append(
+                f"  ~ {bench}/{label}: skipped (config drift on "
+                + ", ".join(f"{f}: {brow.get(f)!r}->{crow.get(f)!r}"
+                            for f in drift) + ")")
+            continue
+        bder = brow.get("derived") or {}
+        cder = crow.get("derived") or {}
+        for metric, (direction, rel, abs_tol) in RULES.items():
+            if metric not in bder or metric not in cder:
+                continue
+            try:
+                b = float(bder[metric])
+                c = float(cder[metric])
+            except (TypeError, ValueError):
+                continue
+            n_cmp += 1
+            tol = max(abs_tol, rel * abs(b))
+            bad = (c < b - tol) if direction == "higher" else (c > b + tol)
+            if bad:
+                violations.append(
+                    f"{bench}/{label}: {metric} regressed "
+                    f"{b:g} -> {c:g} ({direction} is better, "
+                    f"tolerance {tol:g})")
+    out.append(f"  {bench}: {n_cmp} metric(s) compared, "
+               f"{len(violations)} violation(s)")
+    return violations
+
+
+def run_compare(baseline_dir: str, current_dir: str,
+                names: list[str] | None = None) -> int:
+    paths = sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json")))
+    if names is not None:
+        want = {f"BENCH_{n}.json" for n in names}
+        paths = [p for p in paths if os.path.basename(p) in want]
+    if not paths:
+        print(f"compare: no baseline BENCH_*.json under {baseline_dir!r}"
+              + (f" matching {names}" if names else ""), file=sys.stderr)
+        return 2
+    all_violations: list[str] = []
+    report: list[str] = []
+    for bpath in paths:
+        fname = os.path.basename(bpath)
+        bench = fname[len("BENCH_"):-len(".json")]
+        cpath = os.path.join(current_dir, fname)
+        try:
+            base = load_bench(bpath)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"compare: cannot read baseline {bpath}: {e}",
+                  file=sys.stderr)
+            return 2
+        if not os.path.exists(cpath):
+            # only gate benchmarks the current run actually produced —
+            # CI legs run disjoint subsets, each against the same
+            # committed baseline directory
+            report.append(f"  - {bench}: no current BENCH file, skipped")
+            continue
+        try:
+            curr = load_bench(cpath)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"compare: cannot read current {cpath}: {e}",
+                  file=sys.stderr)
+            return 2
+        all_violations.extend(
+            compare_rows(bench, base.get("rows", []),
+                         curr.get("rows", []), report))
+    print("compare report "
+          f"(baseline={baseline_dir}, current={current_dir}):")
+    for line in report:
+        print(line)
+    if all_violations:
+        print(f"\n{len(all_violations)} regression(s):")
+        for v in all_violations:
+            print(f"  ! {v}")
+        return 1
+    print("\nall compared metrics within tolerance")
+    return 0
+
+
+def self_test() -> int:
+    """Exercise the harness against synthetic artifacts: an identical
+    compare must pass, and each class of injected fault must fail."""
+    import tempfile
+
+    def write(d, bench, rows):
+        with open(os.path.join(d, f"BENCH_{bench}.json"), "w") as f:
+            json.dump({"name": bench, "rows": rows}, f)
+
+    def row(name, seed=7, **derived):
+        return {"name": name, "us_per_call": 1.0, "seed": seed,
+                "shards": None, "nprobe": None, "judge_model": None,
+                "band": None, "wall_s": 0.1, "trace_path": None,
+                "derived": derived}
+
+    rows = [row("x/a", thpt=10.0, hit=0.9, lat_ms=120.0, wall_s=3.0),
+            row("x/a", thpt=9.0, hit=0.8, lat_ms=150.0),  # dup name
+            row("x/b", api=100, em=0.7)]
+    failures = []
+    with tempfile.TemporaryDirectory() as base, \
+            tempfile.TemporaryDirectory() as cur:
+        write(base, "x", rows)
+        # 1. identical -> pass
+        write(cur, "x", json.loads(json.dumps(rows)))
+        if run_compare(base, cur) != 0:
+            failures.append("identical artifacts must compare clean")
+        # 2. regression on a 'higher' metric -> fail
+        bad = json.loads(json.dumps(rows))
+        bad[0]["derived"]["thpt"] = 5.0
+        write(cur, "x", bad)
+        if run_compare(base, cur) != 1:
+            failures.append("thpt drop must be flagged")
+        # 3. regression on a 'lower' metric (2nd occurrence) -> fail
+        bad = json.loads(json.dumps(rows))
+        bad[1]["derived"]["lat_ms"] = 500.0
+        write(cur, "x", bad)
+        if run_compare(base, cur) != 1:
+            failures.append("lat_ms rise on row#1 must be flagged")
+        # 4. within tolerance -> pass
+        ok = json.loads(json.dumps(rows))
+        ok[0]["derived"]["lat_ms"] = 121.0   # +1ms < max(2.0, 12.0)
+        write(cur, "x", ok)
+        if run_compare(base, cur) != 0:
+            failures.append("in-tolerance drift must pass")
+        # 5. improvement -> pass
+        ok = json.loads(json.dumps(rows))
+        ok[2]["derived"]["api"] = 10
+        write(cur, "x", ok)
+        if run_compare(base, cur) != 0:
+            failures.append("improvement must pass")
+        # 6. missing row -> fail
+        write(cur, "x", json.loads(json.dumps(rows))[:2])
+        if run_compare(base, cur) != 1:
+            failures.append("missing row must be flagged")
+        # 7. config drift -> skip (pass), even with a huge delta
+        drift = json.loads(json.dumps(rows))
+        drift[0]["seed"] = 8
+        drift[0]["derived"]["thpt"] = 0.1
+        write(cur, "x", drift)
+        if run_compare(base, cur) != 0:
+            failures.append("config-drift row must be skipped, not judged")
+        # 8. ignored metrics never gate
+        wall = json.loads(json.dumps(rows))
+        wall[0]["derived"]["wall_s"] = 9999.0
+        wall[0]["us_per_call"] = 9999.0
+        write(cur, "x", wall)
+        if run_compare(base, cur) != 0:
+            failures.append("wall-clock fields must be ignored")
+        # 9. no current BENCH file at all -> pass with a skip note
+        os.remove(os.path.join(cur, "BENCH_x.json"))
+        if run_compare(base, cur) != 0:
+            failures.append("absent current benchmark must be skipped")
+        # 10. empty baseline dir -> usage error
+        if run_compare(cur, base) != 2:
+            failures.append("empty baseline dir must exit 2")
+    if failures:
+        print("\ncompare --self-test FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  ! {f}", file=sys.stderr)
+        return 1
+    print("\ncompare --self-test passed (10/10 scenarios)")
+    return 0
+
+
+def main(argv=None) -> int:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    ap = argparse.ArgumentParser(
+        description="diff BENCH_*.json against committed baselines")
+    ap.add_argument("--baseline",
+                    default=os.path.join(repo, "benchmarks", "baselines"),
+                    help="directory of committed baseline BENCH_*.json")
+    ap.add_argument("--current", default=".",
+                    help="directory the current run wrote BENCH_*.json to")
+    ap.add_argument("--names", default=None,
+                    help="comma-separated benchmark subset to compare")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the harness itself on synthetic "
+                         "artifacts and exit")
+    args = ap.parse_args(argv)
+    if args.self_test:
+        return self_test()
+    names = args.names.split(",") if args.names else None
+    return run_compare(args.baseline, args.current, names)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1043,3 +1043,145 @@ def obs_trace(smoke: bool = False):
          fed_requests=fed.get("n", 0),
          fed_p99_ms=round(fed.get("latency_p99", float("nan")) * 1e3, 1),
          hit=round(s_fed["aggregate"]["hit_rate"], 3))
+
+
+def obs_timeseries(smoke: bool = False):
+    """§16 continuous-telemetry gate: sampler + SLO monitor end to end.
+
+    Scenario: the same 400-request trending workload run open-loop twice
+    — once at its natural 600 s spread (steady) and once compressed into
+    70 s (a flash crowd at ~8.6x QPS, the --trend-duration knob).  A
+    windowed-p99 SLO (5 s) watches both through the 5 s-interval
+    sampler.  Six hard gates (SystemExit on violation):
+
+      1. neutrality — the sampled steady run's summary, minus the
+         telemetry-only keys, is byte-identical to the unsampled run
+         (sampling must not perturb virtual time);
+      2. steady is clean — zero breach/recovery alerts at natural QPS,
+         and the alerts JSONL artifact is empty;
+      3. the monitor catches the burst — the compressed run must raise
+         a breach, and a later recovery once the first wave's queue
+         drains (the committed profile: breach@30s, recovery@50s,
+         re-breach@60s as the next wave lands);
+      4. alert ordering — alerts are virtual-time-sorted, the first is
+         a breach, and breach/recovery strictly alternate (hysteresis
+         can't emit two of the same state in a row);
+      5. reconciliation — per-window integer deltas in the timeseries
+         JSONL telescope exactly: sum over windows == final cumulative
+         row == the engine summary's end-of-run totals, for every
+         counter (n/api_calls/judge_calls/rows_scanned/stale_hits);
+      6. determinism — same seed => byte-identical timeseries AND
+         alerts JSONL artifacts.
+
+    Artifacts (TS_*.timeseries.jsonl / TS_*.alerts.jsonl) land in the
+    --trace directory when set, next to the TRACE_*/BENCH_* files CI
+    uploads.  Already CI-sized; ``smoke`` changes nothing.
+    """
+    import json
+    import os
+    import tempfile
+
+    from benchmarks import common
+
+    out_dir = common.TRACE_DIR or tempfile.mkdtemp(prefix="obs_ts_")
+    base = dict(workload="trend", n_requests=400, n_intents=300, dim=64,
+                concurrency=None, qpm=400.0, seed=9)
+    slo = ["p99:window.latency_p99:<=:5.0"]
+    interval = 5.0
+    tele_keys = ("timeseries_samples", "slo_breaches", "slo_recoveries",
+                 "timeseries_path", "alerts_path")
+
+    def canon(s):
+        return json.dumps(s, sort_keys=True, default=float)
+
+    def read_jsonl(path):
+        with open(path) as f:
+            return [json.loads(line) for line in f]
+
+    # --- gates 1-2: steady run, sampled vs unsampled ------------------
+    s_plain = run_once(**base)
+    s_steady = run_once(sample_interval=interval, slo=slo,
+                        timeseries=os.path.join(out_dir, "TS_steady"),
+                        **base)
+    if canon({k: v for k, v in s_steady.items() if k not in tele_keys}) \
+            != canon(s_plain):
+        raise SystemExit("obs_timeseries: sampled summary diverges from "
+                         "the unsampled run — sampling is not "
+                         "observationally neutral")
+    if s_steady["slo_breaches"] or s_steady["slo_recoveries"]:
+        raise SystemExit(
+            "obs_timeseries: steady run raised alerts "
+            f"({s_steady['slo_breaches']} breaches) — the SLO bound is "
+            "mis-tuned or latency regressed at natural QPS")
+    if os.path.getsize(s_steady["alerts_path"]) != 0:
+        raise SystemExit("obs_timeseries: steady alerts artifact is "
+                         "non-empty despite zero alerts")
+
+    # --- gates 3-4: burst run must breach, then recover ---------------
+    s_b1 = run_once(sample_interval=interval, slo=slo, trend_duration=70.0,
+                    timeseries=os.path.join(out_dir, "TS_burst"), **base)
+    alerts = read_jsonl(s_b1["alerts_path"])
+    if s_b1["slo_breaches"] < 1 or s_b1["slo_recoveries"] < 1:
+        raise SystemExit(
+            "obs_timeseries: burst run must show breach AND recovery "
+            f"(got {s_b1['slo_breaches']} breaches, "
+            f"{s_b1['slo_recoveries']} recoveries)")
+    if alerts[0]["event"] != "breach":
+        raise SystemExit("obs_timeseries: first alert must be a breach, "
+                         f"got {alerts[0]['event']!r}")
+    for prev, cur in zip(alerts, alerts[1:]):
+        if cur["t"] <= prev["t"]:
+            raise SystemExit("obs_timeseries: alerts not strictly "
+                             "ordered in virtual time")
+        if cur["event"] == prev["event"]:
+            raise SystemExit("obs_timeseries: consecutive "
+                             f"{cur['event']!r} alerts — hysteresis "
+                             "must alternate breach/recovery")
+
+    # --- gate 5: windowed deltas telescope to end-of-run totals -------
+    rows = read_jsonl(s_b1["timeseries_path"])
+    cum = rows[-1]["cum"]
+    for key, total in cum.items():
+        win_sum = sum(r["window"].get(key, 0) or 0 for r in rows)
+        if win_sum != total:
+            raise SystemExit(
+                f"obs_timeseries: window deltas for {key!r} sum to "
+                f"{win_sum}, final cumulative row says {total} — "
+                "windows must tile the run exactly")
+    for cum_key, sum_key in (("n_done", "n"), ("api_calls", "api_calls"),
+                             ("judge_calls", "judge_calls"),
+                             ("rows_scanned", "rows_scanned"),
+                             ("stale_hits", "stale_hits")):
+        if cum[cum_key] != s_b1[sum_key]:
+            raise SystemExit(
+                f"obs_timeseries: cumulative {cum_key}={cum[cum_key]} "
+                f"!= summary {sum_key}={s_b1[sum_key]}")
+
+    # --- gate 6: same seed => byte-identical artifacts ----------------
+    s_b2 = run_once(sample_interval=interval, slo=slo, trend_duration=70.0,
+                    timeseries=os.path.join(out_dir, "TS_burst_rerun"),
+                    **base)
+    for k in ("timeseries_path", "alerts_path"):
+        with open(s_b1[k], "rb") as f1, open(s_b2[k], "rb") as f2:
+            if f1.read() != f2.read():
+                raise SystemExit("obs_timeseries: same-seed runs "
+                                 f"produced different {k} artifacts")
+
+    win_p99 = [r["window"]["latency_p99"] for r in rows
+               if r["window"]["latency_p99"] is not None]
+    emit("obs_timeseries/steady", s_steady["latency_mean"] * 1e6,
+         seed=base["seed"], trace_path=s_steady["timeseries_path"],
+         samples=s_steady["timeseries_samples"], breaches=0, recoveries=0,
+         lat_ms=round(s_steady["latency_mean"] * 1e3, 1),
+         p99_ms=round(s_steady["latency_p99"] * 1e3, 1),
+         hit=round(s_steady["hit_rate"], 3),
+         api=s_steady["api_calls"])
+    emit("obs_timeseries/burst", s_b1["latency_mean"] * 1e6,
+         seed=base["seed"], trace_path=s_b1["timeseries_path"],
+         samples=s_b1["timeseries_samples"],
+         breaches=s_b1["slo_breaches"], recoveries=s_b1["slo_recoveries"],
+         first_breach_t=alerts[0]["t"],
+         max_win_p99_ms=round(max(win_p99) * 1e3, 1),
+         lat_ms=round(s_b1["latency_mean"] * 1e3, 1),
+         hit=round(s_b1["hit_rate"], 3),
+         api=s_b1["api_calls"])

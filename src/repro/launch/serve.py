@@ -25,10 +25,17 @@ from repro.serving.remote import RemoteDataService
 
 
 def build_workload(world, name: str, n: int, seed: int, zipf_s: float = 0.99,
-                   tail_len: int | None = None):
+                   tail_len: int | None = None,
+                   trend_duration: float | None = None):
     if name == "zipf":
         return zipf_workload(world, n, seed=seed, zipf_s=zipf_s)
     if name == "trend":
+        # trend_duration compresses the same request count into a
+        # shorter virtual window — the §16 burst-QPS knob (default
+        # 600 s; 60 s is a 10× elevated-QPS flash crowd)
+        if trend_duration is not None:
+            return trend_workload(world, n, seed=seed,
+                                  duration=trend_duration)
         return trend_workload(world, n, seed=seed)
     if name == "swe":
         return swe_workload(world, max(n // 5, 1), seed=seed)
@@ -83,6 +90,11 @@ def run_once(
     shards: int = 1,
     t_shard_merge: float = 0.0,
     trace: str | None = None,
+    sample_interval: float | None = None,
+    slo: list | None = None,
+    timeseries: str | None = None,
+    trend_duration: float | None = None,
+    stale_age_reservoir: int | None = None,
     seed: int = 0,
 ) -> dict:
     # churn_period switches the ground truth to a MutableWorld whose
@@ -98,7 +110,8 @@ def run_once(
     else:
         world = SemanticWorld(n_intents=n_intents, dim=dim, seed=seed)
     reqs = build_workload(world, workload, n_requests, seed + 1,
-                          zipf_s=zipf_s, tail_len=tail_len)
+                          zipf_s=zipf_s, tail_len=tail_len,
+                          trend_duration=trend_duration)
     cap = int(cache_ratio * world._sizes.sum())
     cache = exact = None
     if mode in ("cortex", "cortex-nojudge"):
@@ -188,13 +201,46 @@ def run_once(
             t_cache_warm=warm_access_latency,
             t_cache_per_row=t_cache_per_row,
             t_shard_merge=t_shard_merge,
+            stale_age_reservoir=stale_age_reservoir,
             seed=seed + 4,
         ),
         clock=clock,
         freshness=freshness,
         tracer=tracer,
     )
+    # §16 continuous telemetry: interval sampling of the registry +
+    # optional SLO monitoring. Strictly observational — with these off
+    # the engine sees the exact same event stream (gated byte-identical).
+    sampler = monitor = None
+    if slo and sample_interval is None:
+        raise ValueError("slo requires sample_interval")
+    if timeseries is not None and sample_interval is None:
+        raise ValueError("timeseries requires sample_interval")
+    if sample_interval is not None:
+        from repro.obs.sampler import TimeSeriesSampler
+        from repro.obs.slo import SLOMonitor
+
+        if slo:
+            monitor = SLOMonitor(slo, tracer=tracer)
+        sampler = TimeSeriesSampler(clock, sample_interval, [eng],
+                                    monitor=monitor)
+        sampler.start()
     out = eng.run()
+    if sampler is not None:
+        sampler.finalize()
+        # telemetry-enabled runs get extra keys ONLY — with
+        # sample_interval=None the summary is byte-identical
+        out["timeseries_samples"] = len(sampler.samples)
+        if monitor is not None:
+            out["slo_breaches"] = monitor.breaches
+            out["slo_recoveries"] = monitor.recoveries
+        if timeseries is not None:
+            from repro.obs.export import export_timeseries
+
+            paths = export_timeseries(sampler, monitor, timeseries)
+            out["timeseries_path"] = paths["timeseries"]
+            if "alerts" in paths:
+                out["alerts_path"] = paths["alerts"]
     if tracer is not None:
         from repro.obs.analyze import check_conservation
         from repro.obs.export import export_trace
@@ -282,6 +328,30 @@ def main(argv=None):
                          "§15): writes PREFIX.jsonl + PREFIX.chrome.json "
                          "(Perfetto-loadable) and verifies the span "
                          "conservation law")
+    ap.add_argument("--sample-interval", type=float, default=None,
+                    metavar="SECONDS",
+                    help="continuous telemetry (DESIGN.md §16): sample "
+                         "the metrics registry every this many VIRTUAL "
+                         "seconds (windowed rates, latency percentiles, "
+                         "pressure gauges); strictly observational")
+    ap.add_argument("--slo", action="append", default=None, metavar="SPEC",
+                    help="declarative SLO (repeatable; needs "
+                         "--sample-interval): "
+                         "name:metric:op:bound[:breach_after[:recover_"
+                         "after]], e.g. p99:window.latency_p99:<=:3.0:2:2"
+                         " — breach/recovery alerts with hysteresis")
+    ap.add_argument("--timeseries", default=None, metavar="PREFIX",
+                    help="write PREFIX.timeseries.jsonl (+ PREFIX.alerts"
+                         ".jsonl when --slo is set); needs "
+                         "--sample-interval")
+    ap.add_argument("--trend-duration", type=float, default=None,
+                    help="trend workload: compress the same requests "
+                         "into this many virtual seconds (default 600; "
+                         "60 = 10x elevated QPS — the §16 burst knob)")
+    ap.add_argument("--stale-age-reservoir", type=int, default=None,
+                    help="bound the stale-age histogram's raw samples "
+                         "to a seeded reservoir of this size (long "
+                         "burst runs; default keeps every sample)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -313,6 +383,11 @@ def main(argv=None):
         shards=args.shards,
         t_shard_merge=args.t_shard_merge,
         trace=args.trace,
+        sample_interval=args.sample_interval,
+        slo=args.slo,
+        timeseries=args.timeseries,
+        trend_duration=args.trend_duration,
+        stale_age_reservoir=args.stale_age_reservoir,
         seed=args.seed,
     )
     print(json.dumps(s, indent=2, default=float))

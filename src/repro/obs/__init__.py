@@ -1,20 +1,30 @@
-"""Observability subsystem (DESIGN.md §15): request-lifecycle tracing,
-unified metrics registry, trace export, and latency attribution.
+"""Observability subsystem (DESIGN.md §15/§16): request-lifecycle
+tracing, unified metrics registry, continuous time-series telemetry,
+SLO monitoring, trace export, and latency attribution.
 
 Everything here rides the deterministic :class:`~repro.serving.clock.
-VirtualClock`, so traces are bit-reproducible: same seed, same bytes.
+VirtualClock`, so traces, timeseries, and alerts are bit-reproducible:
+same seed, same bytes.
 """
 from repro.obs.analyze import (attribution, check_conservation,
-                               format_attribution)
-from repro.obs.export import export_trace, write_chrome_trace, write_jsonl
+                               critical_path, flamegraph_folded,
+                               format_attribution, format_critical_path)
+from repro.obs.export import (export_timeseries, export_trace,
+                              write_alerts, write_chrome_trace,
+                              write_jsonl, write_timeseries)
 from repro.obs.metrics import (STALE_AGE_EDGES, FixedHistogram,
                                MetricsRegistry, ScanMetrics, percentile)
+from repro.obs.sampler import TimeSeriesSampler, limiter_headroom
+from repro.obs.slo import SLO, SLOMonitor
 from repro.obs.trace import BACKGROUND, NULL_TRACER, NullTracer, Tracer
 
 __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER", "BACKGROUND",
     "MetricsRegistry", "FixedHistogram", "ScanMetrics", "percentile",
     "STALE_AGE_EDGES",
+    "TimeSeriesSampler", "limiter_headroom", "SLO", "SLOMonitor",
     "export_trace", "write_jsonl", "write_chrome_trace",
+    "export_timeseries", "write_timeseries", "write_alerts",
     "check_conservation", "attribution", "format_attribution",
+    "critical_path", "flamegraph_folded", "format_critical_path",
 ]

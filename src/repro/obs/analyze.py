@@ -134,6 +134,104 @@ def attribution(tracer: Tracer, records) -> dict:
     return out
 
 
+def critical_path(tracer: Tracer, records) -> dict:
+    """Per-request-class critical-path aggregates (DESIGN.md §16).
+
+    The conservation law makes the critical path trivial to extract:
+    each request's spans *tile* ``[arrival, t_done]``, so every span IS
+    on the critical path — the per-class question is not *which* spans
+    matter but *where a millisecond of improvement lands*. For each
+    class and segment name this reports:
+
+    * ``n_requests`` / ``occurrences`` — requests containing the
+      segment, and total span count (a request can pass a segment
+      several times across rounds);
+    * ``total_s`` and ``frac`` — summed seconds and share of the
+      class's total latency;
+    * ``leverage`` — occurrences / class requests: shaving 1 ms off
+      every pass through this segment cuts the class's *mean* latency
+      by ``leverage`` ms. The per-class ``ranked`` list orders segment
+      names by ``total_s`` (descending, name-tiebroken) — the answer to
+      "optimize what first".
+    """
+    by_req = tracer.request_spans()
+    recs = _records_by_key(records)
+    # class -> name -> [occurrences, total_s, n_requests]
+    acc: dict[str, dict[str, list]] = {}
+    cls_lat: dict[str, float] = {}
+    cls_n: dict[str, int] = {}
+    for key, rec in recs.items():
+        cls = _req_class(rec)
+        cls_lat[cls] = cls_lat.get(cls, 0.0) + rec.latency
+        cls_n[cls] = cls_n.get(cls, 0) + 1
+        seen: set[str] = set()
+        slot = acc.setdefault(cls, {})
+        for s in by_req.get(key, ()):
+            cell = slot.setdefault(s[1], [0, 0.0, 0])
+            cell[0] += 1
+            cell[1] += s[T1] - s[T0]
+            if s[1] not in seen:
+                seen.add(s[1])
+                cell[2] += 1
+    out: dict[str, dict] = {}
+    for cls in sorted(acc):
+        total = cls_lat[cls]
+        n_req = cls_n[cls]
+        segs = {}
+        for name in sorted(acc[cls]):
+            occ, tot_s, nr = acc[cls][name]
+            segs[name] = {
+                "n_requests": nr,
+                "occurrences": occ,
+                "total_s": float(tot_s),
+                "frac": float(tot_s / total) if total else 0.0,
+                "leverage": float(occ / n_req),
+            }
+        ranked = sorted(segs, key=lambda n: (-segs[n]["total_s"], n))
+        out[cls] = {
+            "n_requests": n_req,
+            "total_latency_s": float(total),
+            "segments": segs,
+            "ranked": ranked,
+        }
+    return out
+
+
+def flamegraph_folded(tracer: Tracer, records) -> list[str]:
+    """Span-duration aggregates as folded-stack lines —
+    ``class;segment <microseconds>`` — the input format of the standard
+    flamegraph toolchain (one frame deep: the conservation law makes
+    request span trees linear, so class;segment is the whole stack).
+    Lines are sorted, weights are integer µs: deterministic output."""
+    report = critical_path(tracer, records)
+    lines = []
+    for cls, blk in report.items():
+        for name, seg in blk["segments"].items():
+            lines.append(f"{cls};{name} {int(round(seg['total_s'] * 1e6))}")
+    return sorted(lines)
+
+
+def format_critical_path(report: Mapping) -> str:
+    """Human-readable critical-path table (one block per class, segments
+    in ranked order)."""
+    lines = []
+    for cls, blk in report.items():
+        lines.append(
+            f"[{cls}] n={blk['n_requests']} "
+            f"total={blk['total_latency_s']:.3f}s"
+        )
+        lines.append(f"  {'segment':<18}{'occ':>6}{'total_s':>10}"
+                     f"{'frac':>7}{'lev':>6}")
+        for name in blk["ranked"]:
+            seg = blk["segments"][name]
+            lines.append(
+                f"  {name:<18}{seg['occurrences']:>6}"
+                f"{seg['total_s']:>10.3f}{seg['frac']:>7.1%}"
+                f"{seg['leverage']:>6.2f}"
+            )
+    return "\n".join(lines)
+
+
 def format_attribution(report: Mapping) -> str:
     """Human-readable attribution table (one block per request class)."""
     lines = []

@@ -63,6 +63,46 @@ def write_chrome_trace(tracer: Tracer, path: str) -> str:
     return path
 
 
+def _canon_dumps(obj) -> str:
+    """The repo's canonical JSON form: sorted keys, compact separators,
+    floats via ``repr`` — same seed ⇒ byte-identical artifact."""
+    return json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def write_timeseries(samples: list[dict], path: str) -> str:
+    """One telemetry sample per line (DESIGN.md §16), in emission order
+    (= virtual-time order). Rows come straight from
+    :class:`~repro.obs.sampler.TimeSeriesSampler.samples` — pure-Python
+    scalars only, so serialization is byte-deterministic."""
+    with open(path, "w") as f:
+        for row in samples:
+            f.write(_canon_dumps(row) + "\n")
+    return path
+
+
+def write_alerts(alerts: list[dict], path: str) -> str:
+    """One SLO breach/recovery alert per line, in emission order (the
+    :class:`~repro.obs.slo.SLOMonitor`'s deterministic sample-order ×
+    declaration-order). An empty alert list writes an empty file — the
+    steady-baseline gate byte-compares against exactly that."""
+    with open(path, "w") as f:
+        for a in alerts:
+            f.write(_canon_dumps(a) + "\n")
+    return path
+
+
+def export_timeseries(sampler, monitor, prefix: str) -> dict[str, str]:
+    """Write ``<prefix>.timeseries.jsonl`` (always) and
+    ``<prefix>.alerts.jsonl`` (when a monitor ran, even if it raised
+    nothing)."""
+    out = {"timeseries": write_timeseries(sampler.samples,
+                                          prefix + ".timeseries.jsonl")}
+    if monitor is not None:
+        out["alerts"] = write_alerts(monitor.alerts,
+                                     prefix + ".alerts.jsonl")
+    return out
+
+
 def export_trace(tracer: Tracer, prefix: str) -> dict[str, str]:
     """Write both formats next to each other:
     ``<prefix>.jsonl`` + ``<prefix>.chrome.json``."""

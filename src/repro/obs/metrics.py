@@ -50,40 +50,98 @@ def percentile(values: Sequence[float] | np.ndarray, q: float) -> float:
 class FixedHistogram:
     """Fixed-bucket histogram over ``[0, e0), [e0, e1), …, [e_last, inf)``.
 
-    Keeps the raw sample list: bucket counts are derived on demand, and
-    ``mean`` is ``np.mean(values)`` — bit-identical to the pre-registry
-    summary code that held a bare ``list[float]``. Sample volume here is
-    small (one float per *stale* serve), so raw retention is cheap.
+    Two retention modes:
+
+    * **raw (default, ``max_samples=None``)** — keeps every sample:
+      bucket counts are derived on demand, and ``mean`` is
+      ``np.mean(values)`` — bit-identical to the pre-registry summary
+      code that held a bare ``list[float]``. Sample volume on the
+      stale-age path is small (one float per *stale* serve), so raw
+      retention is the right default and the ``stale_age_mean``
+      bit-parity contract is untouched.
+    * **bounded reservoir (``max_samples=N``)** — for long burst runs:
+      ``values`` holds a deterministic (seeded) Algorithm-R reservoir of
+      at most N samples, while bucket counts and the mean come from
+      exact incremental counters (``count`` / running sum) — the
+      histogram and mean stay exact at any volume; only the raw-sample
+      *list* is bounded. The reservoir RNG is private and only consumed
+      in this mode, so default-mode behavior is untouched.
     """
 
-    __slots__ = ("edges", "values")
+    __slots__ = ("edges", "values", "max_samples", "count",
+                 "_counts", "_sum", "_rng")
 
-    def __init__(self, edges: Sequence[float] = STALE_AGE_EDGES):
+    def __init__(self, edges: Sequence[float] = STALE_AGE_EDGES, *,
+                 max_samples: int | None = None, seed: int = 0):
         self.edges = tuple(float(e) for e in edges)
         self.values: list[float] = []
+        if max_samples is not None and max_samples < 1:
+            raise ValueError("max_samples must be >= 1")
+        self.max_samples = max_samples
+        self.count = 0
+        # exact incremental bucket counts (len(edges)+1 buckets) + sum:
+        # only consulted in reservoir mode, maintained in both
+        self._counts = [0] * (len(self.edges) + 1)
+        self._sum = 0.0
+        self._rng = (np.random.default_rng(seed)
+                     if max_samples is not None else None)
+
+    def _bucket(self, v: float) -> int:
+        for i, hi in enumerate(self.edges):
+            if v < hi:
+                return i
+        return len(self.edges)
 
     def add(self, v: float) -> None:
-        self.values.append(v)
+        self._counts[self._bucket(v)] += 1
+        self._sum += v
+        self.count += 1
+        if self.max_samples is None:
+            self.values.append(v)
+        elif len(self.values) < self.max_samples:
+            self.values.append(v)
+        else:
+            # Algorithm R: the i-th sample (1-based) replaces a resident
+            # with probability N/i — seeded, so deterministic
+            j = int(self._rng.integers(0, self.count))
+            if j < self.max_samples:
+                self.values[j] = v
 
     def __len__(self) -> int:
-        return len(self.values)
+        """Total samples *added* (== ``len(values)`` in raw mode; may
+        exceed it in reservoir mode)."""
+        return self.count
 
     def to_dict(self) -> dict[str, int]:
         """Bucket counts under the legacy summary keys: ``"0-30"``,
-        ``"30-60"``, …, ``"1800+"`` (``%g``-formatted edges)."""
-        hist: dict[str, int] = {}
+        ``"30-60"``, …, ``"1800+"`` (``%g``-formatted edges). Exact in
+        BOTH modes — reservoir mode reads the incremental counters."""
+        if self.max_samples is None:
+            hist: dict[str, int] = {}
+            lo = 0.0
+            for hi in self.edges:
+                hist[f"{lo:g}-{hi:g}"] = sum(
+                    1 for a in self.values if lo <= a < hi
+                )
+                lo = hi
+            hist[f"{lo:g}+"] = sum(1 for a in self.values if a >= lo)
+            return hist
+        hist = {}
         lo = 0.0
-        for hi in self.edges:
-            hist[f"{lo:g}-{hi:g}"] = sum(
-                1 for a in self.values if lo <= a < hi
-            )
+        for i, hi in enumerate(self.edges):
+            hist[f"{lo:g}-{hi:g}"] = self._counts[i]
             lo = hi
-        hist[f"{lo:g}+"] = sum(1 for a in self.values if a >= lo)
+        hist[f"{lo:g}+"] = self._counts[len(self.edges)]
         return hist
 
     @property
     def mean(self) -> float:
-        return float(np.mean(self.values)) if self.values else 0.0
+        """Raw mode: ``np.mean(values)`` (the bit-parity contract).
+        Reservoir mode: exact running ``sum/count`` over EVERY sample —
+        not an estimate from the reservoir."""
+        if self.max_samples is None:
+            return float(np.mean(self.values)) if self.values else 0.0
+        return self._sum / self.count if self.count else 0.0
 
 
 @dataclasses.dataclass
@@ -140,7 +198,23 @@ class MetricsRegistry:
         self._collectors: list[tuple[str, Callable[[], Mapping]]] = []
 
     def register(self, namespace: str, collector: Callable[[], Mapping]) -> None:
+        """Idempotent per namespace: re-registering REPLACES the prior
+        collector in place (keeping its snapshot position), so engines
+        rebuilt inside a sweep loop sharing one registry can't silently
+        double-collect — the last registration wins."""
+        for i, (ns, _) in enumerate(self._collectors):
+            if ns == namespace:
+                self._collectors[i] = (namespace, collector)
+                return
         self._collectors.append((namespace, collector))
+
+    def unregister(self, namespace: str) -> bool:
+        """Drop a namespace's collector; returns whether it existed."""
+        for i, (ns, _) in enumerate(self._collectors):
+            if ns == namespace:
+                del self._collectors[i]
+                return True
+        return False
 
     def namespaces(self) -> list[str]:
         return [ns for ns, _ in self._collectors]

@@ -88,6 +88,12 @@ class EngineConfig:
     em_p_wrong: float = 0.10            # EM | wrong cached info
     gpu_cost_per_hour: float = 1.49     # Table 5
     warmup_frac: float = 0.0            # exclude first fraction from stats
+    stale_age_reservoir: Optional[int] = None  # bound the stale-age
+                                        # histogram's raw-sample list to
+                                        # a seeded reservoir of this size
+                                        # (long burst runs, §16); None =
+                                        # raw retention, the
+                                        # stale_age_mean bit-parity mode
     seed: int = 0
 
 
@@ -220,7 +226,10 @@ class Engine:
         # untraced one, and NULL_TRACER makes the disabled path free.
         self.trace = tracer if tracer is not None else NULL_TRACER
         self.stale_hits = 0
-        self.stale_age_hist = FixedHistogram(STALE_AGE_EDGES)
+        self.stale_age_hist = FixedHistogram(
+            STALE_AGE_EDGES, max_samples=self.cfg.stale_age_reservoir,
+            seed=self.cfg.seed,
+        )
         self.rng = np.random.default_rng(self.cfg.seed)
         self.prefetcher = MarkovPrefetcher(
             confidence=self.cfg.prefetch_confidence
@@ -288,6 +297,27 @@ class Engine:
             "agent_lane_tokens": float(self.gpu.agent.busy_tokens),
             "judge_lane_tokens": float(self.gpu.judge.busy_tokens),
         })
+
+        def gauge_ns():
+            # live pressure gauges (DESIGN.md §16): instantaneous state
+            # the cumulative counters can't see — sampled by the
+            # TimeSeriesSampler, never projected into summary(), and
+            # every read is pure (limiter headroom via the non-mutating
+            # peek, NOT TokenBucket.headroom)
+            from repro.obs.sampler import limiter_headroom
+
+            g = {
+                "inflight": self._active,
+                "judge_backlog": len(self._judge_backlog),
+                "stage1_pending": len(self._stage1_pending),
+                "limiter_headroom": limiter_headroom(
+                    self.remote, self.clock.now
+                ),
+            }
+            g.update(self.gpu.occupancy())
+            return g
+
+        reg.register("gauge", gauge_ns)
 
         def cache_ns():
             if self.cache is None:

@@ -142,9 +142,21 @@ class Federation:
         self.bandwidth = bandwidth
         self.peering = peering
         self.stats = FederationStats()
+        # live queue depth (§16 gauges): broadcasts currently undecided,
+        # per requesting region — incremented at route(), decremented
+        # exactly once per broadcast (first positive claim OR last NAK)
+        self._inflight_peeks = [0] * n
 
     def rtt(self, a: int, b: int) -> float:
         return float(self.rtt_matrix[a, b])
+
+    def gauges(self) -> dict:
+        """Pressure gauges for the telemetry sampler (DESIGN.md §16):
+        total and per-region in-flight peek broadcasts. Pure reads."""
+        out = {"inflight_peeks": sum(self._inflight_peeks)}
+        for rid, n in enumerate(self._inflight_peeks):
+            out[f"inflight_peeks_r{rid}"] = n
+        return out
 
     # ------------------------------------------------------------ routing
 
@@ -158,10 +170,12 @@ class Federation:
             self._origin(engine, st, q, t0)
             return
         self.stats.peeks += 1
+        self._inflight_peeks[region.rid] += 1
         q_emb = engine.world.embed(q)
         # one shared decision cell per broadcast: first positive response
         # claims it; the last NAK triggers the origin fallback
-        state = {"decided": False, "pending": len(peers)}
+        state = {"decided": False, "pending": len(peers),
+                 "src": region.rid}
         for peer in peers:
             rtt = self.rtt(region.rid, peer.rid)
             self.stats.probes += 1
@@ -209,6 +223,7 @@ class Federation:
             t_arrive = now + rtt / 2.0 + lease.size / self.bandwidth
             if lease.expires_at > t_arrive:
                 state["decided"] = True
+                self._inflight_peeks[state["src"]] -= 1
                 # §15 spans: broadcast -> winning response, then the
                 # response half-RTT + serialization until the value
                 # lands (t_arrive is the exact remote_done instant)
@@ -243,6 +258,7 @@ class Federation:
         if state["pending"] == 0:
             # every sibling NAKed (or leased too close to expiry): the
             # peek ends with the LAST response; origin fetch starts here
+            self._inflight_peeks[state["src"]] -= 1
             if engine.trace.enabled:
                 engine.trace.span(st.rec.rid, "peek_rtt", t0, now,
                                   engine.region_id, "miss")
@@ -307,6 +323,11 @@ class FederationRunner:
         cluster=None,  # ClusterConfig -> IVF stage-1 routing (§12)
         freshness=None,  # FreshnessConfig -> per-region managers (§11)
         tracer=None,  # one obs.Tracer shared by every region (§15)
+        sample_interval: Optional[float] = None,  # §16 telemetry: sample
+                                                  # the fleet every this
+                                                  # many virtual seconds
+        slos=None,  # SLO objects / spec strings for the §16 monitor
+                    # (requires sample_interval)
         seed: int = 0,
     ):
         if topology not in ("local", "peered", "global"):
@@ -453,6 +474,25 @@ class FederationRunner:
                 tracer=tracer,
             )
 
+        # §16 continuous telemetry: ONE sampler over the whole fleet
+        # (shared clock), with the federation's queue-depth gauges and
+        # an optional SLO monitor riding the sample stream. Strictly
+        # observational — summaries stay byte-identical (gated).
+        self.monitor = None
+        self.sampler = None
+        if slos and sample_interval is None:
+            raise ValueError("slos require sample_interval")
+        if sample_interval is not None:
+            from repro.obs.sampler import TimeSeriesSampler
+            from repro.obs.slo import SLOMonitor
+
+            if slos:
+                self.monitor = SLOMonitor(slos, tracer=tracer)
+            self.sampler = TimeSeriesSampler(
+                self.clock, sample_interval, self.engines,
+                federation=self.federation, monitor=self.monitor,
+            )
+
     @property
     def engines(self) -> list[Engine]:
         return [r.engine for r in self.regions]
@@ -466,8 +506,12 @@ class FederationRunner:
     def run(self) -> dict:
         for e in self.engines:
             e.prepare()
+        if self.sampler is not None:
+            self.sampler.start()
         while self.clock.pending and not all(e.done for e in self.engines):
             self.clock.step()
+        if self.sampler is not None:
+            self.sampler.finalize()
         return self.summary()
 
     # ----------------------------------------------------------- metrics
@@ -538,6 +582,15 @@ class FederationRunner:
                 m.stats.refreshes for m in self._managers()
             )),
         }
+        # per-region tail attribution through records_by_region() (§16):
+        # the fleet p99 above hides WHICH region is slow — this names it,
+        # via the same shared percentile the engine summaries use
+        agg["latency_p99_by_region"] = {
+            self.regions[rid].cfg.name: percentile(
+                [rec.latency for rec in rrecs], 99
+            )
+            for rid, rrecs in self.records_by_region().items() if rrecs
+        }
         shards = max(
             (getattr(c, "stage1_shards", 1) for c in self._caches()),
             default=1,
@@ -546,6 +599,13 @@ class FederationRunner:
             # mesh-sharded stage 1 (DESIGN.md §13) — keyed off when
             # unsharded so pre-§13 aggregate summaries stay identical
             agg["stage1_shards"] = shards
+        if self.sampler is not None:
+            # telemetry-enabled runs get extra keys ONLY (the §16
+            # neutrality gate strips these before byte-comparison)
+            agg["timeseries_samples"] = len(self.sampler.samples)
+            if self.monitor is not None:
+                agg["slo_breaches"] = self.monitor.breaches
+                agg["slo_recoveries"] = self.monitor.recoveries
         return {"aggregate": agg, "regions": per_region}
 
 

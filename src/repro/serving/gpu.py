@@ -162,6 +162,19 @@ class GPU:
         self.agent.version += 1
         return True
 
+    def occupancy(self) -> dict:
+        """Instantaneous lane-occupancy gauges (DESIGN.md §16): active
+        jobs, admission-queue depth, and active-slot utilisation per
+        lane. Pure reads — safe from the telemetry sampler."""
+        return {
+            "agent_active": self.agent.n_active,
+            "agent_waiting": self.agent.n_waiting,
+            "agent_util": self.agent.n_active / self.agent.slots,
+            "judge_active": self.judge.n_active,
+            "judge_waiting": self.judge.n_waiting,
+            "judge_util": self.judge.n_active / self.judge.slots,
+        }
+
     def judge_admission_ok(self) -> bool:
         """Fine-grained guardrail: defer judge work while the agent lane is
         saturated (queue backed up behind full slots)."""

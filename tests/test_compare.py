@@ -1,0 +1,131 @@
+"""Perf-regression harness (benchmarks/compare.py, DESIGN.md §16):
+exit-code contract over synthetic BENCH artifacts, plus the committed
+baselines comparing clean against themselves."""
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from benchmarks.compare import RULES, main, run_compare, self_test
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINES = os.path.join(REPO, "benchmarks", "baselines")
+
+
+def _row(name, seed=7, **derived):
+    return {"name": name, "us_per_call": 1.0, "seed": seed,
+            "shards": None, "nprobe": None, "judge_model": None,
+            "band": None, "wall_s": 0.1, "trace_path": None,
+            "derived": derived}
+
+
+def _write(d, bench, rows):
+    with open(os.path.join(d, f"BENCH_{bench}.json"), "w") as f:
+        json.dump({"name": bench, "rows": rows}, f)
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    base = tmp_path / "base"
+    cur = tmp_path / "cur"
+    base.mkdir()
+    cur.mkdir()
+    rows = [_row("a", thpt=10.0, lat_ms=100.0),
+            _row("a", thpt=8.0, lat_ms=120.0),
+            _row("b", hit=0.9, api=50)]
+    _write(str(base), "x", rows)
+    _write(str(cur), "x", json.loads(json.dumps(rows)))
+    return str(base), str(cur), rows
+
+
+def test_identical_artifacts_pass(dirs):
+    base, cur, _ = dirs
+    assert run_compare(base, cur) == 0
+
+
+def test_higher_metric_drop_fails(dirs):
+    base, cur, rows = dirs
+    rows[2]["derived"]["hit"] = 0.5
+    _write(cur, "x", rows)
+    assert run_compare(base, cur) == 1
+
+
+def test_lower_metric_rise_on_repeated_row_fails(dirs):
+    base, cur, rows = dirs
+    rows[1]["derived"]["lat_ms"] = 400.0   # second occurrence of "a"
+    _write(cur, "x", rows)
+    assert run_compare(base, cur) == 1
+
+
+def test_within_tolerance_and_improvements_pass(dirs):
+    base, cur, rows = dirs
+    rows[0]["derived"]["lat_ms"] = 101.0   # inside max(2.0, 10%)
+    rows[2]["derived"]["api"] = 5          # improvement
+    _write(cur, "x", rows)
+    assert run_compare(base, cur) == 0
+
+
+def test_missing_row_fails(dirs):
+    base, cur, rows = dirs
+    _write(cur, "x", rows[:2])
+    assert run_compare(base, cur) == 1
+
+
+def test_config_drift_skips_instead_of_judging(dirs):
+    base, cur, rows = dirs
+    rows[0]["seed"] = 99
+    rows[0]["derived"]["thpt"] = 0.001
+    _write(cur, "x", rows)
+    assert run_compare(base, cur) == 0
+
+
+def test_unlisted_metrics_are_ignored(dirs):
+    base, cur, rows = dirs
+    rows[0]["derived"]["wall_s"] = 1e9
+    rows[0]["derived"]["novel_metric"] = -1e9
+    rows[0]["us_per_call"] = 1e9
+    _write(cur, "x", rows)
+    assert run_compare(base, cur) == 0
+
+
+def test_absent_current_bench_is_skipped(dirs):
+    base, cur, _ = dirs
+    os.remove(os.path.join(cur, "BENCH_x.json"))
+    assert run_compare(base, cur) == 0
+
+
+def test_empty_baseline_dir_is_usage_error(tmp_path):
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert run_compare(str(empty), str(tmp_path)) == 2
+
+
+def test_names_filter(dirs):
+    base, cur, rows = dirs
+    rows[2]["derived"]["hit"] = 0.0
+    _write(cur, "x", rows)
+    assert run_compare(base, cur, names=["x"]) == 1
+    assert run_compare(base, cur, names=["y"]) == 2  # nothing matched
+
+
+def test_rules_are_direction_complete():
+    assert RULES and all(
+        d in ("higher", "lower") and rel >= 0 and abs_tol >= 0
+        for d, rel, abs_tol in RULES.values())
+
+
+def test_self_test_passes():
+    assert self_test() == 0
+
+
+def test_main_entrypoint(dirs):
+    base, cur, _ = dirs
+    assert main(["--baseline", base, "--current", cur]) == 0
+
+
+@pytest.mark.skipif(not os.path.isdir(BASELINES),
+                    reason="no committed baselines")
+def test_committed_baselines_compare_clean_against_themselves():
+    assert run_compare(BASELINES, BASELINES) == 0

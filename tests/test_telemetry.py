@@ -1,0 +1,403 @@
+"""Continuous telemetry (DESIGN.md §16): sampler, SLO monitor,
+critical-path analyzer, and the supporting metrics-layer changes.
+
+The §16 contract, each leg tested here:
+
+* **neutrality** — sampling (and SLO monitoring) is strictly
+  observational: a sampled run's summary, minus the telemetry-only
+  keys, is byte-identical to the unsampled run at the same seed, over a
+  matrix of engine configurations and all three federation topologies;
+* **reconciliation** — per-window integer deltas telescope exactly:
+  ``sum(window deltas) == final cumulative row == summary totals``;
+* **determinism** — same seed ⇒ byte-identical timeseries and alerts
+  JSONL artifacts;
+* **hysteresis** — breach after N consecutive violating samples,
+  recovery after M consecutive OK samples, ``None`` samples advance
+  neither counter, alert ordering pinned;
+* **critical path** — span trees fold into per-class aggregates whose
+  ``total_s`` telescopes to the class's total latency (the conservation
+  law), with deterministic flamegraph output;
+* **registry / histogram** — idempotent ``register``, ``unregister``,
+  and the bounded-reservoir histogram mode (raw mode stays bit-exact).
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.data.workloads import region_workloads
+from repro.data.world import SemanticWorld
+from repro.launch.serve import run_once
+from repro.obs.analyze import (critical_path, flamegraph_folded,
+                               format_critical_path)
+from repro.obs.metrics import FixedHistogram, MetricsRegistry
+from repro.obs.slo import SLO, SLOMonitor
+from repro.obs.trace import BACKGROUND, Tracer
+from repro.serving.federation import FederationRunner
+
+# keys a telemetry-enabled run_once adds on top of the plain summary
+TELE_KEYS = ("timeseries_samples", "slo_breaches", "slo_recoveries",
+             "timeseries_path", "alerts_path")
+
+
+def _canon(s: dict) -> str:
+    return json.dumps(s, sort_keys=True, default=float)
+
+
+def _strip(s: dict) -> dict:
+    return {k: v for k, v in s.items() if k not in TELE_KEYS}
+
+
+# ------------------------------------------------------------ neutrality
+
+# the golden-config matrix: one row per engine feature that could
+# plausibly interact with a sampler riding the same virtual clock
+MATRIX = {
+    "closed_loop": dict(concurrency=4),
+    "open_loop": dict(concurrency=None),
+    "tiered_longtail": dict(workload="longtail", tail_len=30,
+                            warm_frac=0.5, concurrency=4),
+    "churn_refresh": dict(churn_period=30.0, invalidation=True,
+                          refresh_ahead=True, concurrency=4),
+    "ivf_sharded": dict(cluster=True, n_clusters=16, nprobe=4, shards=2,
+                        t_shard_merge=1e-4, t_cache_per_row=1e-6,
+                        concurrency=4),
+    "judge_band": dict(judge_band=0.1, concurrency=4),
+    "exact": dict(mode="exact", concurrency=4),
+    "nojudge": dict(mode="cortex-nojudge", concurrency=4),
+    "vanilla": dict(mode="vanilla", concurrency=4),
+}
+_BASE = dict(n_requests=60, n_intents=150, dim=32, seed=5)
+
+
+@pytest.mark.parametrize("name", sorted(MATRIX))
+def test_sampler_is_observationally_neutral(name):
+    kw = {**_BASE, **MATRIX[name]}
+    plain = run_once(**kw)
+    sampled = run_once(sample_interval=2.0,
+                       slo=["p99:window.latency_p99:<=:1e9"], **kw)
+    assert sampled["timeseries_samples"] > 0
+    assert _canon(_strip(sampled)) == _canon(plain)
+
+
+@pytest.mark.parametrize("topology", ["local", "peered", "global"])
+def test_federation_sampler_is_neutral(topology):
+    world = SemanticWorld(n_intents=200, dim=32, seed=5)
+
+    def runner(**extra):
+        reqs = region_workloads(world, n_regions=3, n_per_region=40,
+                                seed=6)
+        return FederationRunner(world=world, region_requests=reqs,
+                                topology=topology, seed=7, **extra)
+
+    plain = runner().run()
+    fr = runner(sample_interval=5.0,
+                slos=["p99:window.latency_p99:<=:1e9"])
+    sampled = fr.run()
+    assert sampled["aggregate"]["timeseries_samples"] > 0
+    sampled["aggregate"] = _strip(sampled["aggregate"])
+    assert _canon(sampled) == _canon(plain)
+    # fleet samples carry per-region blocks + federation queue gauges
+    row = fr.sampler.samples[-1]
+    assert set(row["regions"]) == {"0", "1", "2"}
+    assert "fed_inflight_peeks" in row["gauges"]
+
+
+def test_federation_summary_attributes_p99_by_region():
+    world = SemanticWorld(n_intents=200, dim=32, seed=5)
+    reqs = region_workloads(world, n_regions=3, n_per_region=40, seed=6)
+    fr = FederationRunner(world=world, region_requests=reqs,
+                          topology="local", seed=7)
+    s = fr.run()
+    by_region = s["aggregate"]["latency_p99_by_region"]
+    assert len(by_region) == 3
+    # shared-percentile attribution over records_by_region()
+    from repro.obs.metrics import percentile
+    for rid, rrecs in fr.records_by_region().items():
+        name = fr.regions[rid].cfg.name
+        assert by_region[name] == percentile(
+            [r.latency for r in rrecs], 99)
+
+
+# ----------------------------------------------- reconciliation, timing
+
+def test_window_deltas_telescope_to_summary_totals(tmp_path):
+    s = run_once(sample_interval=2.0,
+                 timeseries=str(tmp_path / "ts"), **_BASE)
+    rows = [json.loads(l) for l in
+            open(s["timeseries_path"]).read().splitlines()]
+    cum = rows[-1]["cum"]
+    for key, total in cum.items():
+        assert sum(r["window"].get(key, 0) or 0 for r in rows) == total, key
+    assert cum["n_done"] == s["n"]
+    assert cum["api_calls"] == s["api_calls"]
+    assert cum["judge_calls"] == s["judge_calls"]
+    assert cum["rows_scanned"] == s["rows_scanned"]
+    assert cum["stale_hits"] == s["stale_hits"]
+
+
+def test_samples_land_on_the_virtual_time_grid(tmp_path):
+    interval = 2.0
+    s = run_once(sample_interval=interval,
+                 timeseries=str(tmp_path / "ts"), **_BASE)
+    rows = [json.loads(l) for l in
+            open(s["timeseries_path"]).read().splitlines()]
+    # every sample except a final partial window sits exactly on the
+    # grid; durations cover the run with no gap
+    for k, r in enumerate(rows[:-1]):
+        assert r["t"] == (k + 1) * interval
+    assert rows[-1]["t"] >= rows[-2]["t"] + 0 if len(rows) > 1 else True
+    assert rows[0]["dur"] == rows[0]["t"]
+    for a, b in zip(rows, rows[1:]):
+        assert b["dur"] == b["t"] - a["t"]
+    # gauges ride every sample
+    assert "inflight" in rows[0]["gauges"]
+    assert "limiter_headroom" in rows[0]["gauges"]
+    assert "agent_active" in rows[0]["gauges"]
+
+
+def test_same_seed_artifacts_are_byte_identical(tmp_path):
+    kw = dict(sample_interval=2.0,
+              slo=["p99:window.latency_p99:<=:0.5"], **_BASE)
+    a = run_once(timeseries=str(tmp_path / "a"), **kw)
+    b = run_once(timeseries=str(tmp_path / "b"), **kw)
+    assert (tmp_path / "a.timeseries.jsonl").read_bytes() \
+        == (tmp_path / "b.timeseries.jsonl").read_bytes()
+    assert (tmp_path / "a.alerts.jsonl").read_bytes() \
+        == (tmp_path / "b.alerts.jsonl").read_bytes()
+    assert a["timeseries_samples"] == b["timeseries_samples"] > 0
+
+
+def test_slo_without_interval_is_rejected():
+    with pytest.raises(ValueError):
+        run_once(slo=["p99:window.latency_p99:<=:1.0"], **_BASE)
+    with pytest.raises(ValueError):
+        run_once(timeseries="/tmp/nope", **_BASE)
+
+
+# ------------------------------------------------------------ hysteresis
+
+def _sample(t, value):
+    return {"t": float(t), "window": {"m": value}}
+
+
+def test_slo_spec_parsing():
+    s = SLO.parse("p99:window.latency_p99:<=:3.0")
+    assert (s.name, s.metric, s.op, s.bound) \
+        == ("p99", "window.latency_p99", "<=", 3.0)
+    assert s.breach_after == s.recover_after == 2
+    s = SLO.parse("acc:window.info_accuracy:>=:0.9:3:1")
+    assert (s.breach_after, s.recover_after) == (3, 1)
+    with pytest.raises(ValueError):
+        SLO.parse("bad:only:three")
+    with pytest.raises(ValueError):
+        SLO(name="x", metric="m", op="<", bound=1.0)
+    with pytest.raises(ValueError):
+        SLO(name="x", metric="m", op="<=", bound=1.0, breach_after=0)
+
+
+def test_hysteresis_breach_recovery_ordering():
+    mon = SLOMonitor([SLO("lat", "window.m", "<=", 1.0,
+                          breach_after=2, recover_after=2)])
+    vals = [0.5, 2.0, 0.5,      # lone violation: no breach
+            2.0, 2.0,           # 2 consecutive -> breach at t=4
+            0.5, 2.0,           # recovery streak broken
+            0.5, 0.5,           # 2 consecutive OK -> recovery at t=8
+            2.0, 2.0]           # breach again at t=10
+    for t, v in enumerate(vals):
+        mon.observe(_sample(t, v))
+    assert [(a["t"], a["event"]) for a in mon.alerts] \
+        == [(4.0, "breach"), (8.0, "recovery"), (10.0, "breach")]
+    assert mon.breaches == 2 and mon.recoveries == 1
+    assert mon.active() == ["lat"]
+
+
+def test_hysteresis_skips_none_samples():
+    mon = SLOMonitor([SLO("lat", "window.m", "<=", 1.0)])
+    seq = [2.0, None, 2.0]      # None must not reset the bad streak
+    for t, v in enumerate(seq):
+        mon.observe(_sample(t, v))
+    assert [(a["t"], a["event"]) for a in mon.alerts] == [(2.0, "breach")]
+    # ...and an idle all-None tail must not fake a recovery
+    for t in range(3, 10):
+        mon.observe(_sample(t, None))
+    assert mon.recoveries == 0 and mon.active() == ["lat"]
+
+
+def test_floor_objective_and_breach_after_one():
+    mon = SLOMonitor([SLO("acc", "window.m", ">=", 0.9,
+                          breach_after=1, recover_after=1)])
+    for t, v in enumerate([0.95, 0.5, 0.95]):
+        mon.observe(_sample(t, v))
+    assert [(a["t"], a["event"]) for a in mon.alerts] \
+        == [(1.0, "breach"), (2.0, "recovery")]
+
+
+def test_monitor_emits_trace_markers():
+    tr = Tracer()
+    mon = SLOMonitor([SLO("lat", "window.m", "<=", 1.0,
+                          breach_after=1, recover_after=1)],
+                     tracer=tr, region=2)
+    mon.observe(_sample(1, 5.0))
+    mon.observe(_sample(2, 0.5))
+    names = [(s[0], s[1], s[4], s[5]) for s in tr.spans]
+    assert (BACKGROUND, "slo_breach", 2, "lat") in names
+    assert (BACKGROUND, "slo_recovery", 2, "lat") in names
+
+
+def test_duplicate_slo_names_rejected():
+    with pytest.raises(ValueError):
+        SLOMonitor(["a:m:<=:1", "a:n:<=:2"])
+
+
+# --------------------------------------------------------- critical path
+
+def test_critical_path_folds_span_trees():
+    tr = Tracer()
+
+    class Rec:
+        def __init__(self, rid, arrival, t_done, remote_calls,
+                     peer_transfers=0):
+            self.rid, self.arrival, self.t_done = rid, arrival, t_done
+            self.latency = t_done - arrival
+            self.remote_calls = remote_calls
+            self.peer_transfers = peer_transfers
+
+    # hit: queue 1s + cache 2s; miss: queue 1s + remote 3s + remote 1s
+    tr.span(0, "queue", 0.0, 1.0)
+    tr.span(0, "cache", 1.0, 3.0)
+    tr.span(1, "queue", 10.0, 11.0)
+    tr.span(1, "remote", 11.0, 14.0)
+    tr.span(1, "remote", 14.0, 15.0)
+    recs = [Rec(0, 0.0, 3.0, 0), Rec(1, 10.0, 15.0, 2)]
+    rep = critical_path(tr, recs)
+    assert set(rep) == {"hit", "miss"}
+    hit, miss = rep["hit"], rep["miss"]
+    assert hit["n_requests"] == 1 and hit["total_latency_s"] == 3.0
+    assert hit["segments"]["cache"]["frac"] == pytest.approx(2 / 3)
+    assert hit["ranked"] == ["cache", "queue"]
+    # the remote segment occurs twice in one request: leverage 2.0
+    seg = miss["segments"]["remote"]
+    assert (seg["occurrences"], seg["n_requests"]) == (2, 1)
+    assert seg["leverage"] == 2.0
+    assert seg["total_s"] == 4.0
+    assert miss["ranked"][0] == "remote"
+    # conservation: per class, segment seconds tile the latency total
+    for blk in rep.values():
+        assert sum(s["total_s"] for s in blk["segments"].values()) \
+            == pytest.approx(blk["total_latency_s"])
+    folded = flamegraph_folded(tr, recs)
+    assert folded == sorted(["hit;queue 1000000", "hit;cache 2000000",
+                             "miss;queue 1000000",
+                             "miss;remote 4000000"])
+    txt = format_critical_path(rep)
+    assert "[miss]" in txt and "remote" in txt
+
+
+def test_critical_path_on_a_real_traced_run(tmp_path):
+    kw = dict(n_requests=80, concurrency=4, judge_band=0.1, seed=3)
+    run_once(trace=str(tmp_path / "t"), **kw)
+    # rebuild the analyzer inputs from the exported span JSONL
+    rows = [json.loads(l) for l in
+            open(str(tmp_path / "t.jsonl")).read().splitlines()]
+    tr = Tracer()
+    for r in rows:
+        tr.span(r["rid"], r["name"], r["t0"], r["t1"],
+                region=r["region"], tag=r.get("tag"))
+
+    class Rec:
+        pass
+
+    recs = []
+    per_req = tr.request_spans()
+    for (region, rid), spans in per_req.items():
+        if rid < 0:
+            continue
+        spans = sorted(spans, key=lambda s: s[2])
+        rec = Rec()
+        rec.rid = rid
+        rec.arrival = spans[0][2]
+        rec.t_done = spans[-1][3]
+        rec.latency = rec.t_done - rec.arrival
+        names = [s[1] for s in spans]
+        rec.remote_calls = sum(n == "origin_fetch" for n in names)
+        rec.peer_transfers = 0
+        recs.append(rec)
+    rep = critical_path(tr, recs)
+    assert rep
+    for blk in rep.values():
+        total = sum(s["total_s"] for s in blk["segments"].values())
+        assert total == pytest.approx(blk["total_latency_s"])
+        assert abs(sum(s["frac"] for s in blk["segments"].values()) - 1.0) \
+            < 1e-9
+    assert len(flamegraph_folded(tr, recs)) \
+        == sum(len(b["segments"]) for b in rep.values())
+
+
+# ------------------------------------------- registry / histogram modes
+
+def test_registry_register_is_idempotent_and_unregisterable():
+    reg = MetricsRegistry()
+    reg.register("a", lambda: {"x": 1})
+    reg.register("b", lambda: {"y": 2})
+    # replace semantics: same namespace re-registered wins, position kept
+    reg.register("a", lambda: {"x": 10})
+    snap = reg.snapshot()
+    assert snap["a.x"] == 10 and snap["b.y"] == 2
+    assert list(snap) == ["a.x", "b.y"]
+    assert reg.unregister("b") is True
+    assert reg.unregister("b") is False
+    assert "b.y" not in reg.snapshot()
+
+
+def test_histogram_raw_mode_is_bit_exact_legacy():
+    h_old = FixedHistogram([1.0, 2.0])
+    h_new = FixedHistogram([1.0, 2.0], max_samples=None)
+    rng = np.random.default_rng(0)
+    vals = rng.exponential(1.0, 500)
+    for v in vals:
+        h_old.add(float(v))
+        h_new.add(float(v))
+    assert h_new.to_dict() == h_old.to_dict()
+    # raw mode must keep the exact np.mean-over-raw-values code path
+    assert h_new.mean == float(np.mean(vals))
+    assert len(h_new) == 500
+
+
+def test_histogram_reservoir_mode_bounds_memory_exactly():
+    h = FixedHistogram([1.0, 2.0], max_samples=64, seed=7)
+    rng = np.random.default_rng(1)
+    vals = [float(v) for v in rng.exponential(1.0, 1000)]
+    for v in vals:
+        h.add(v)
+    assert len(h.values) == 64          # bounded retention
+    assert len(h) == 1000               # exact count preserved
+    assert set(h.values) <= set(vals)
+    # bucket counts and mean stay exact (incremental, not sampled)
+    d = h.to_dict()
+    assert d["0-1"] == sum(v < 1.0 for v in vals)
+    assert d["1-2"] == sum(1.0 <= v < 2.0 for v in vals)
+    assert d["2+"] == sum(v >= 2.0 for v in vals)
+    assert h.mean == pytest.approx(sum(vals) / len(vals))
+    # seeded: same stream -> same reservoir
+    h2 = FixedHistogram([1.0, 2.0], max_samples=64, seed=7)
+    for v in vals:
+        h2.add(v)
+    assert h2.values == h.values
+
+
+def test_engine_reservoir_mode_preserves_behavior():
+    kw = dict(churn_period=30.0, invalidation=True, **_BASE)
+    full = run_once(**kw)
+    capped = run_once(stale_age_reservoir=8, **kw)
+    # the reservoir only bounds raw retention — event flow, counters,
+    # and the histogram's exact bucket counts are unchanged; only
+    # stale_age_mean may differ in the last float bit (np.mean over raw
+    # values vs the incremental _sum/count)
+    assert capped["stale_age_mean"] \
+        == pytest.approx(full["stale_age_mean"])
+    a = {k: v for k, v in capped.items() if k != "stale_age_mean"}
+    b = {k: v for k, v in full.items() if k != "stale_age_mean"}
+    assert _canon(a) == _canon(b)
