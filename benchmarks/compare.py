@@ -79,6 +79,15 @@ RULES: dict[str, tuple[str, float, float]] = {
     # freshness — lower is better
     "stale_rate":      ("lower", 0.00, 0.02),
     "stale_hits":      ("lower", 0.00, 2.0),
+    # robustness (§17) — SLO-violating windows and worst windowed p99
+    # must not creep back up; hung peeks are a hard zero; breaker must
+    # keep opening AND re-closing under the committed outage scenario
+    "breach_windows":  ("lower", 0.00, 2.0),
+    "max_win_p99_s":   ("lower", 0.20, 10.0),
+    "hung_peeks":      ("lower", 0.00, 0.0),
+    "peek_timeouts":   ("lower", 0.50, 5.0),
+    "breaker_opens":   ("higher", 0.50, 0.0),
+    "breaker_closes":  ("higher", 0.50, 0.0),
 }
 
 # emit()'s first-class config stamps: a mismatch means the two rows

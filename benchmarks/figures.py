@@ -1185,3 +1185,155 @@ def obs_timeseries(smoke: bool = False):
          lat_ms=round(s_b1["latency_mean"] * 1e3, 1),
          hit=round(s_b1["hit_rate"], 3),
          api=s_b1["api_calls"])
+
+
+def overload(smoke: bool = False):
+    """§17 robustness gate: fault injection + overload control end to end.
+
+    Three legs, each with hard gates (SystemExit on violation):
+
+    1. **neutrality** — a run with the controller armed but ``off`` must
+       match the controller-free run byte-for-byte once the (all-zero)
+       ``overload`` counter block is stripped; an off controller that
+       actuates anything is a §17 contract violation.
+    2. **flash crowd** — the 400-request trend workload compressed into
+       12 s (~50x natural QPS) behind a 5 s windowed-p99 SLO, controller
+       off vs on.  The controller must strictly reduce the number of
+       SLO-violating sample windows AND the worst windowed p99, while
+       holding hit rate >= the uncontrolled run and info-accuracy >= the
+       no-cache floor minus 0.02 (sheds only widen the trust edge past
+       tau + margin, so quality must survive).
+    3. **region outage** — three peered regions, region 1 dark over
+       t in [20,45) virtual seconds, peeks armed with a 0.25 s deadline
+       and a K=3 circuit breaker.  The run must complete every request
+       with zero hung peeks, and the breaker must both open and re-close
+       (trace markers ``circuit_open`` / ``circuit_close``), proving the
+       half-open probe path re-admits the region after the window.
+
+    Timeseries artifacts (TS_overload_*.jsonl) land in --trace for CI
+    upload.  Already CI-sized; ``smoke`` changes nothing.
+    """
+    import json
+    import os
+    import tempfile
+
+    from benchmarks import common
+    from repro.data.workloads import region_workloads
+    from repro.data.world import SemanticWorld
+    from repro.obs.trace import Tracer
+    from repro.serving.federation import FederationRunner
+
+    out_dir = common.TRACE_DIR or tempfile.mkdtemp(prefix="overload_")
+    base = dict(workload="trend", n_requests=400, n_intents=300, dim=64,
+                concurrency=None, qpm=400.0, seed=9)
+    slo_bound = 5.0
+    slo = [f"p99:window.latency_p99:<=:{slo_bound}"]
+
+    def canon(s):
+        return json.dumps(s, sort_keys=True, default=float)
+
+    def window_stats(path):
+        """(violating-window count, worst windowed p99) from a §16
+        timeseries artifact; empty windows carry p99=None and don't
+        count either way."""
+        with open(path) as f:
+            p99s = [json.loads(line)["window"].get("latency_p99")
+                    for line in f]
+        vals = [p for p in p99s if p is not None]
+        return sum(1 for p in vals if p > slo_bound), max(vals, default=0.0)
+
+    # --- leg 1: armed-but-off controller is byte-neutral --------------
+    s_plain = run_once(**base)
+    s_off0 = run_once(overload="off", **base)
+    if any(s_off0["overload"].values()):
+        raise SystemExit("overload: off controller actuated "
+                         f"({s_off0['overload']}) — every policy must "
+                         "be inert behind the off-switch")
+    if canon({k: v for k, v in s_off0.items() if k != "overload"}) \
+            != canon(s_plain):
+        raise SystemExit("overload: armed-but-off run diverges from the "
+                         "controller-free run — §17 neutrality broken")
+
+    # --- leg 2: 50x flash crowd, controller off vs on -----------------
+    burst = dict(base, trend_duration=12.0, sample_interval=5.0, slo=slo)
+    s_off = run_once(overload="off",
+                     timeseries=os.path.join(out_dir, "TS_overload_off"),
+                     **burst)
+    s_on = run_once(overload="on",
+                    timeseries=os.path.join(out_dir, "TS_overload_on"),
+                    **burst)
+    bw_off, max_off = window_stats(s_off["timeseries_path"])
+    bw_on, max_on = window_stats(s_on["timeseries_path"])
+    if bw_on >= bw_off:
+        raise SystemExit(
+            "overload: controller-on run must violate the SLO in "
+            f"strictly fewer windows (on={bw_on} vs off={bw_off})")
+    if max_on >= max_off:
+        raise SystemExit(
+            "overload: controller-on worst windowed p99 must improve "
+            f"(on={max_on:.1f}s vs off={max_off:.1f}s)")
+    if s_on["hit_rate"] < s_off["hit_rate"]:
+        raise SystemExit(
+            "overload: shedding must not cost hit rate "
+            f"(on={s_on['hit_rate']:.3f} vs off={s_off['hit_rate']:.3f})")
+    if s_on["info_accuracy"] < 0.98:
+        raise SystemExit(
+            "overload: controller-on info-accuracy "
+            f"{s_on['info_accuracy']:.3f} below the no-cache floor - "
+            "0.02 — shed eligibility is admitting bad matches")
+    if s_on["overload"]["shed_hits"] == 0:
+        raise SystemExit("overload: burst run never shed — the "
+                         "controller is not reacting to the crowd")
+
+    # --- leg 3: region outage with peek deadline + circuit breaker ----
+    world = SemanticWorld(n_intents=200, dim=64, seed=3)
+    reqs = region_workloads(world, 150, 3, overlap=0.5, seed=4)
+    tracer = Tracer()
+    fr = FederationRunner(
+        world=world, region_requests=reqs, topology="peered",
+        tracer=tracer, sample_interval=5.0,
+        faults=["region_outage:20:45:region=1"],
+        peek_timeout=0.25, breaker_k=3, breaker_cooldown=5.0, seed=0)
+    agg = fr.run()["aggregate"]
+    n_sent = sum(len(r) for r in reqs)
+    if agg["n"] != n_sent:
+        raise SystemExit(
+            f"overload: outage run completed {agg['n']}/{n_sent} "
+            "requests — the outage wedged the federation")
+    if agg["hung_peeks"] != 0:
+        raise SystemExit(
+            f"overload: {agg['hung_peeks']} peeks still in flight after "
+            "drain — a timeout or response leaked its inflight slot")
+    marks = {s[1] for s in tracer.spans}
+    for needed in ("circuit_open", "circuit_close"):
+        if needed not in marks:
+            raise SystemExit(
+                f"overload: no {needed!r} marker in the trace — the "
+                "breaker lifecycle did not complete "
+                f"(opens={agg['breaker_opens']}, "
+                f"closes={agg['breaker_closes']})")
+    if agg["peek_timeouts"] == 0:
+        raise SystemExit("overload: outage run recorded zero peek "
+                         "timeouts — the fault windows never bit")
+
+    emit("overload/burst_off", s_off["latency_mean"] * 1e6,
+         seed=base["seed"], trace_path=s_off["timeseries_path"],
+         breach_windows=bw_off, max_win_p99_s=round(max_off, 2),
+         lat_ms=round(s_off["latency_mean"] * 1e3, 1),
+         hit=round(s_off["hit_rate"], 3),
+         info_acc=round(s_off["info_accuracy"], 3), sheds=0)
+    emit("overload/burst_on", s_on["latency_mean"] * 1e6,
+         seed=base["seed"], trace_path=s_on["timeseries_path"],
+         breach_windows=bw_on, max_win_p99_s=round(max_on, 2),
+         lat_ms=round(s_on["latency_mean"] * 1e3, 1),
+         hit=round(s_on["hit_rate"], 3),
+         info_acc=round(s_on["info_accuracy"], 3),
+         sheds=s_on["overload"]["shed_hits"])
+    emit("overload/outage", agg["latency_p50"] * 1e6, seed=0,
+         n=agg["n"], hung_peeks=agg["hung_peeks"],
+         peek_timeouts=agg["peek_timeouts"],
+         breaker_opens=agg["breaker_opens"],
+         breaker_closes=agg["breaker_closes"],
+         fetch_failed=agg["fetch_failed"],
+         p99_ms=round(agg["latency_p99"] * 1e3, 1),
+         hit=round(agg["hit_rate"], 3))

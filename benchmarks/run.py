@@ -58,6 +58,7 @@ ALL = {
     "judge_colocation": figures.judge_colocation,
     "obs_trace": figures.obs_trace,
     "obs_timeseries": figures.obs_timeseries,
+    "overload": figures.overload,
     "kernel_ann": kernels_bench.kernel_ann,
     "kernel_flash": kernels_bench.kernel_flash,
     "cache_path": kernels_bench.cache_path_calibration,

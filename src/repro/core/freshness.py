@@ -153,6 +153,10 @@ class FreshnessManager:
         self._inflight: set[int] = set()
         self._tracer = NULL_TRACER
         self._region = 0
+        # §17 overload seam: an armed OverloadController may pause
+        # refresh-ahead under limiter-headroom / SLO pressure. None =
+        # legacy behavior, bit-identical.
+        self.overload = None
         if feed is not None and self.cfg.invalidation:
             # interest predicate lets the feed stop firing for intents
             # this cache no longer holds (O(1) via the intent index)
@@ -263,6 +267,11 @@ class FreshnessManager:
         if self.remote.headroom(now) < self.cfg.refresh_min_headroom:
             self.stats.refresh_skipped += 1
             return False
+        if self.overload is not None and not self.overload.allow_refresh(
+                self.remote.headroom(now), now):
+            # §17: refresh-ahead paused under overload pressure
+            self.stats.refresh_skipped += 1
+            return False
         key = self.cache.store[se_id].key
         if mark_stale:
             self.cache.store[se_id].revalidating = True
@@ -272,6 +281,13 @@ class FreshnessManager:
             latency_mult=self.world.latency_mult(key),
             cost_mult=self.world.cost_mult(key),
         )
+        if out.failed:
+            # origin brownout (§17): the revalidation fetch died — the
+            # entry simply stays as-is (possibly marked revalidating);
+            # a later notice/TTL timer will try again
+            self._inflight.discard(se_id)
+            self.stats.refresh_skipped += 1
+            return False
         self.stats.refresh_cost += out.cost
         self._tracer.span(BACKGROUND, "refresh", now, out.finish,
                           self._region)

@@ -95,6 +95,8 @@ def run_once(
     timeseries: str | None = None,
     trend_duration: float | None = None,
     stale_age_reservoir: int | None = None,
+    faults: list | None = None,
+    overload: str | None = None,
     seed: int = 0,
 ) -> dict:
     # churn_period switches the ground truth to a MutableWorld whose
@@ -164,7 +166,16 @@ def run_once(
     elif mode == "exact":
         exact = ExactCache(cap, max_ttl=max_ttl)
     clock = VirtualClock()
-    remote = RemoteDataService(qpm=qpm, seed=seed + 3)
+    # §17 fault injection: parse --faults specs into a FaultSchedule
+    # (brownouts live in the remote service, judge slowdown in the
+    # engine); None = today's fault-free run, byte-identical
+    fault_sched = None
+    if faults:
+        from repro.serving.faults import FaultSchedule
+
+        fault_sched = (faults if hasattr(faults, "region_down")
+                       else FaultSchedule.parse(faults))
+    remote = RemoteDataService(qpm=qpm, seed=seed + 3, faults=fault_sched)
     freshness = None
     if cache is not None and (invalidation or refresh_ahead):
         feed = ChangeFeed(world, clock) if invalidation else None
@@ -181,6 +192,32 @@ def run_once(
         from repro.obs.trace import Tracer
 
         tracer = Tracer()
+    # §16 monitor is created BEFORE the engine so the §17 overload
+    # controller can read its breach state; the sampler that feeds it
+    # starts right after construction (ordering only — no behavior
+    # change for telemetry-only runs)
+    sampler = monitor = None
+    if slo and sample_interval is None:
+        raise ValueError("slo requires sample_interval")
+    if timeseries is not None and sample_interval is None:
+        raise ValueError("timeseries requires sample_interval")
+    if sample_interval is not None and slo:
+        from repro.obs.slo import SLOMonitor
+
+        monitor = SLOMonitor(slo, tracer=tracer)
+    ctrl = None
+    if overload is not None:
+        if overload not in ("on", "off"):
+            raise ValueError(f"overload must be 'on'/'off', got {overload!r}")
+        from repro.serving.overload import (OverloadConfig,
+                                            OverloadController)
+
+        ctrl = OverloadController(
+            OverloadConfig(enabled=(overload == "on")),
+            monitor=monitor, tracer=tracer,
+        )
+        if freshness is not None:
+            freshness.overload = ctrl
     eng = Engine(
         world=world,
         requests=reqs,
@@ -207,21 +244,16 @@ def run_once(
         clock=clock,
         freshness=freshness,
         tracer=tracer,
+        overload=ctrl,
+        faults=fault_sched,
     )
     # §16 continuous telemetry: interval sampling of the registry +
-    # optional SLO monitoring. Strictly observational — with these off
-    # the engine sees the exact same event stream (gated byte-identical).
-    sampler = monitor = None
-    if slo and sample_interval is None:
-        raise ValueError("slo requires sample_interval")
-    if timeseries is not None and sample_interval is None:
-        raise ValueError("timeseries requires sample_interval")
+    # optional SLO monitoring (monitor built above). Strictly
+    # observational — with these off the engine sees the exact same
+    # event stream (gated byte-identical).
     if sample_interval is not None:
         from repro.obs.sampler import TimeSeriesSampler
-        from repro.obs.slo import SLOMonitor
 
-        if slo:
-            monitor = SLOMonitor(slo, tracer=tracer)
         sampler = TimeSeriesSampler(clock, sample_interval, [eng],
                                     monitor=monitor)
         sampler.start()
@@ -257,6 +289,56 @@ def run_once(
             raise AssertionError(
                 "span conservation violated:\n" + "\n".join(violations[:20])
             )
+    return out
+
+
+def run_federated(
+    *,
+    n_regions: int = 3,
+    topology: str = "peered",
+    n_requests: int = 300,
+    n_intents: int = 300,
+    dim: int = 64,
+    overlap: float = 0.5,
+    rtt: float = 0.08,
+    faults: list | None = None,
+    peek_timeout: float | None = None,
+    overload: str | None = None,
+    sample_interval: float | None = None,
+    slo: list | None = None,
+    trace: str | None = None,
+    seed: int = 0,
+) -> dict:
+    """Multi-region driver (--regions > 1): region-skewed request
+    streams through a FederationRunner, with the §17 robustness knobs
+    (--faults / --peek-timeout / --overload) on the federation path.
+    Returns the runner's {aggregate, regions} summary."""
+    from repro.data.workloads import region_workloads
+    from repro.serving.federation import FederationRunner
+
+    world = SemanticWorld(n_intents=n_intents, dim=dim, seed=seed)
+    streams = region_workloads(
+        world, max(n_requests // n_regions, 1), n_regions,
+        overlap=overlap, seed=seed + 1,
+    )
+    tracer = None
+    if trace is not None:
+        from repro.obs.trace import Tracer
+
+        tracer = Tracer()
+    runner = FederationRunner(
+        world=world, region_requests=streams, topology=topology,
+        rtt=rtt, faults=faults or None, peek_timeout=peek_timeout,
+        overload=overload, tracer=tracer,
+        sample_interval=sample_interval, slos=slo, seed=seed,
+    )
+    out = runner.run()
+    if tracer is not None:
+        from repro.obs.export import export_trace
+
+        paths = export_trace(tracer, trace)
+        out["aggregate"]["trace_jsonl"] = paths["jsonl"]
+        out["aggregate"]["trace_spans"] = len(tracer.spans)
     return out
 
 
@@ -352,8 +434,49 @@ def main(argv=None):
                     help="bound the stale-age histogram's raw samples "
                          "to a seeded reservoir of this size (long "
                          "burst runs; default keeps every sample)")
+    ap.add_argument("--faults", action="append", default=None,
+                    metavar="SPEC",
+                    help="inject a deterministic fault window (DESIGN.md "
+                         "§17; repeatable): kind:start:end[:k=v,...], "
+                         "kinds region_outage / wan_degrade / "
+                         "origin_brownout / judge_slowdown, e.g. "
+                         "origin_brownout:20:80:error_rate=0.6")
+    ap.add_argument("--overload", default=None, choices=["on", "off"],
+                    help="arm the §17 OverloadController ('off' = armed "
+                         "but every policy disabled — the neutrality "
+                         "probe); policies: shed-to-nojudge above the "
+                         "latency SLO / backlog cap, prefetch+refresh "
+                         "pause under headroom pressure, serve-stale on "
+                         "origin failure")
+    ap.add_argument("--peek-timeout", type=float, default=None,
+                    help="federation peek deadline in seconds (§17, "
+                         "needs --regions > 1): a silent peer counts as "
+                         "a NAK, with a per-peer circuit breaker")
+    ap.add_argument("--regions", type=int, default=1,
+                    help="run a multi-region federation of this many "
+                         "regions (region-skewed streams) instead of "
+                         "the solo engine")
+    ap.add_argument("--topology", default="peered",
+                    choices=["local", "peered", "global"],
+                    help="federation topology for --regions > 1")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.regions > 1:
+        s = run_federated(
+            n_regions=args.regions,
+            topology=args.topology,
+            n_requests=args.n_requests,
+            faults=args.faults,
+            peek_timeout=args.peek_timeout,
+            overload=args.overload,
+            sample_interval=args.sample_interval,
+            slo=args.slo,
+            trace=args.trace,
+            seed=args.seed,
+        )
+        print(json.dumps(s, indent=2, default=float))
+        return s
 
     s = run_once(
         workload=args.workload,
@@ -388,6 +511,8 @@ def main(argv=None):
         timeseries=args.timeseries,
         trend_duration=args.trend_duration,
         stale_age_reservoir=args.stale_age_reservoir,
+        faults=args.faults,
+        overload=args.overload,
         seed=args.seed,
     )
     print(json.dumps(s, indent=2, default=float))

@@ -39,6 +39,7 @@ from repro.data.workloads import Request
 from repro.data.world import SemanticWorld
 from repro.obs.metrics import (STALE_AGE_EDGES, FixedHistogram,
                                MetricsRegistry, percentile)
+from repro.obs.sampler import limiter_headroom
 from repro.obs.trace import NULL_TRACER
 from repro.serving.clock import VirtualClock
 from repro.serving.gpu import GPU, GPUConfig, judge_batch_tokens
@@ -200,6 +201,8 @@ class Engine:
         region_id: int = 0,
         freshness=None,
         tracer=None,
+        overload=None,
+        faults=None,
     ):
         self.world = world
         self.requests = requests
@@ -225,6 +228,15 @@ class Engine:
         # — so a traced run is bit-identical in virtual time to an
         # untraced one, and NULL_TRACER makes the disabled path free.
         self.trace = tracer if tracer is not None else NULL_TRACER
+        # Robustness seam (DESIGN.md §17): an armed OverloadController
+        # actuates shed-to-nojudge / background-pause / serve-stale
+        # policies off the §16 telemetry; an armed FaultSchedule injects
+        # deterministic failure windows (judge slowdown is read here,
+        # brownouts live in RemoteDataService, outages in Federation).
+        # Both default to None and every consult is None-gated, so
+        # fault-free runs stay bit-identical.
+        self.overload = overload
+        self.faults = faults
         self.stale_hits = 0
         self.stale_age_hist = FixedHistogram(
             STALE_AGE_EDGES, max_samples=self.cfg.stale_age_reservoir,
@@ -290,8 +302,19 @@ class Engine:
             "calls": self.remote.calls,
             "attempts": self.remote.attempts,
             "retries": self.remote.retries,
+            "failed": getattr(self.remote, "failed", 0),
             "total_cost": self.remote.total_cost,
+            "throttled_wait": getattr(self.remote, "throttled_wait", 0.0),
         })
+
+        def overload_ns():
+            # §17 actuation counters; read dynamically so a controller
+            # attached after construction is still observed
+            if self.overload is None:
+                return {}
+            return self.overload.metrics()
+
+        reg.register("overload", overload_ns)
         reg.register("gpu", lambda: {
             "n_chips": self.gpu.n_chips,
             "agent_lane_tokens": float(self.gpu.agent.busy_tokens),
@@ -614,12 +637,22 @@ class Engine:
         # band's trust edge is served without judge latency — through the
         # same shared hit accounting as the nojudge ablation. With no
         # band armed, admit() is a constant "judge" and this is the
-        # legacy judge-everything engine, event for event.
-        if self.cache.seri.pipeline.admit(
+        # legacy judge-everything engine, event for event. Under
+        # overload (§17) a judge-classified request may be SHED to the
+        # same trust path: the band effectively widens toward trust
+        # while the latency SLO is breached or the backlog is capped.
+        verdict = self.cache.seri.pipeline.admit(
             sims, self.cache.seri.tau_sim
-        ) == "bypass":
-            self.trace.marker(st.rec.rid, "band_bypass", now,
-                              self.region_id)
+        )
+        shed = (verdict == "judge" and self.overload is not None
+                and self.overload.shed_judge(
+                    now, len(self._judge_backlog),
+                    best_sim=float(sims[0]),
+                    tau=self.cache.seri.tau_sim))
+        if verdict == "bypass" or shed:
+            self.trace.marker(st.rec.rid,
+                              "shed_nojudge" if shed else "band_bypass",
+                              now, self.region_id)
             se = cands[0]
             key, value = se.key, se.value
             self._note_stale(se, now)
@@ -710,6 +743,11 @@ class Engine:
                     self.cfg.judge_tokens, len(batch),
                     self.cfg.judge_batch_marginal,
                 )
+            if self.faults is not None:
+                # judge-device slowdown (§17): the micro-batch costs
+                # mult× the tokens while the fault window is active
+                tokens *= self.faults.judge_mult(self.region_id,
+                                                 self._now)
             self._submit(
                 self.gpu.judge, tokens,
                 lambda now, b=batch: self._judge_batch_done(b, now),
@@ -784,6 +822,9 @@ class Engine:
             latency_mult=self.world.latency_mult(q),
             cost_mult=self.world.cost_mult(q),
         )
+        if out.failed:
+            self.fetch_failed(st, q, t0, out)
+            return
         self.trace.span(st.rec.rid, "origin_fetch", t0, out.finish,
                         self.region_id)
         self._push(
@@ -791,6 +832,54 @@ class Engine:
             lambda now: self.remote_done(st, q, t0, now, value=None,
                                          cost=out.cost),
         )
+
+    def fetch_failed(self, st: _ReqState, q: str, t0: float, out,
+                     t_start: Optional[float] = None):
+        """Answer through a degraded path after a terminal fetch failure
+        (origin brownout + retries exhausted, DESIGN.md §17). The request
+        must never hang: serve a known-stale but present cache entry if
+        the controller allows it, else re-enter ``_go_remote`` at the
+        failure horizon (``out.finish`` — the virtual instant the last
+        backoff expired) and try again; brownout windows are finite, so
+        the retry chain terminates.
+
+        ``t_start`` is where the failed attempt's span opens (the last
+        NAK's arrival on the federated path; ``t0`` otherwise)."""
+        span_t0 = t0 if t_start is None else t_start
+        self.trace.span(st.rec.rid, "origin_fetch", span_t0, out.finish,
+                        self.region_id, "failed")
+        ov = self.overload
+        if (ov is not None and ov.serve_stale_ok()
+                and self.cache is not None):
+            se = self._stale_candidate(q)
+            if se is not None:
+                ov.stats.stale_served += 1
+                self.trace.marker(st.rec.rid, "stale_serve", out.finish,
+                                  self.region_id)
+                # snapshot now: the entry can be evicted (its SoA row
+                # reused) before the serve instant arrives
+                value = se.value
+                self._note_stale(se, self._now)
+
+                def serve(now):
+                    st.rec.remote_time += now - t0
+                    self._observe(st, value, from_cache=True)
+
+                self._push(out.finish, serve)
+                return
+        if ov is not None:
+            ov.stats.failed_retries += 1
+        self._push(out.finish, lambda now: self._go_remote(st))
+
+    def _stale_candidate(self, q: str):
+        """A present (possibly expired/stale) entry for the query's own
+        intent — §17 serve-stale: better a known-stale answer than an
+        error while the origin browns out."""
+        ses = self.cache.ses_for_intent(self.world.intent_of(q))
+        for se in ses:
+            if se.valid and not getattr(se, "revalidating", False):
+                return se
+        return None
 
     def remote_done(self, st: _ReqState, q: str, t0: float, now: float, *,
                     value=None, cost: float = 0.0,
@@ -861,13 +950,23 @@ class Engine:
         pq_emb = self.world.embed(pq)
         if self.cache.contains_semantic(pq, pq_emb, self._now):
             return
-        if self.remote.headroom(self._now) < self.cfg.prefetch_min_headroom:
+        # pure-read headroom (the same helper the §16 sampler uses), so
+        # the on-path gate and the telemetry see one value and the read
+        # never mutates limiter state
+        headroom = limiter_headroom(self.remote, self._now)
+        if headroom < self.cfg.prefetch_min_headroom:
+            return
+        if self.overload is not None and \
+                not self.overload.allow_prefetch(headroom, self._now):
+            # §17: prefetch paused under limiter-headroom / SLO pressure
             return
         out = self.remote.fetch(
             self._now,
             latency_mult=self.world.latency_mult(pq),
             cost_mult=self.world.cost_mult(pq),
         )
+        if out.failed:
+            return  # §17 brownout: drop the speculative fetch, no retry
         t0 = self._now
 
         def prefetched(now):
@@ -1152,6 +1251,16 @@ class Engine:
                                  if m["exact.lookups"] else 0.0))
         else:
             out.update(hit_rate=0.0)
+        if self.faults is not None:
+            # fault injection armed (§17): brownout outcome accounting.
+            # Keyed off when fault-free so pre-§17 summaries stay
+            # byte-identical (the neutrality gate).
+            out["fetch_failed"] = d["remote.failed"]
+            out["throttled_wait"] = d["remote.throttled_wait"]
+        if self.overload is not None:
+            # §17 actuation counters (same conditional-key contract)
+            out["overload"] = {k: m[f"overload.{k}"]
+                               for k in self.overload.metrics()}
         out["cost_total"] = out["api_cost"] + out["gpu_cost"]
         out["thpt_per_dollar"] = out["throughput_rps"] / max(
             out["cost_total"], 1e-9

@@ -43,6 +43,7 @@ from repro.core.judge import OracleJudge
 from repro.data.workloads import Request
 from repro.data.world import SemanticWorld
 from repro.obs.metrics import percentile
+from repro.obs.trace import BACKGROUND
 from repro.serving.clock import VirtualClock
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.gpu import GPU, GPUConfig
@@ -87,6 +88,11 @@ class FederationStats:
     expired_leases: int = 0   # positive peeks whose lease died in flight
     origin_fetches: int = 0
     warm_leases: int = 0      # positive peeks served from a WARM tier
+    # robustness (DESIGN.md §17)
+    peek_timeouts: int = 0    # probes resolved by the deadline, not a response
+    breaker_skips: int = 0    # probes suppressed by an open circuit
+    breaker_opens: int = 0    # circuit transitions closed/half-open -> open
+    breaker_closes: int = 0   # circuit transitions half-open -> closed
 
 
 @dataclasses.dataclass
@@ -127,6 +133,11 @@ class Federation:
         transfer_cost: float = 5e-4,
         bandwidth: float = 50e6,   # bytes/s on inter-region links
         peering: bool = True,
+        peek_timeout: Optional[float] = None,  # NAK a silent peer after
+                                               # this deadline (§17)
+        faults=None,               # FaultSchedule (DESIGN.md §17)
+        breaker_k: int = 3,        # consecutive timeouts that open a circuit
+        breaker_cooldown: float = 5.0,  # open -> half-open probe interval
     ):
         self.regions = regions
         self.clock = clock
@@ -141,11 +152,20 @@ class Federation:
         self.transfer_cost = transfer_cost
         self.bandwidth = bandwidth
         self.peering = peering
+        self.peek_timeout = peek_timeout
+        self.faults = faults
+        self.breaker_k = breaker_k
+        self.breaker_cooldown = breaker_cooldown
         self.stats = FederationStats()
         # live queue depth (§16 gauges): broadcasts currently undecided,
         # per requesting region — incremented at route(), decremented
-        # exactly once per broadcast (first positive claim OR last NAK)
+        # exactly once per broadcast (first positive claim OR last NAK,
+        # where a peek timeout counts as that peer's NAK — §17)
         self._inflight_peeks = [0] * n
+        # per-directed-link circuit breakers, lazily created, keyed
+        # (src_rid, dst_rid): each region learns its own view of which
+        # peers are dark from its own peek timeouts (DESIGN.md §17)
+        self._breaker: dict = {}
 
     def rtt(self, a: int, b: int) -> float:
         return float(self.rtt_matrix[a, b])
@@ -169,20 +189,99 @@ class Federation:
         if not self.peering or not peers:
             self._origin(engine, st, q, t0)
             return
+        if self.peek_timeout is not None:
+            # circuit breakers (§17) only operate when timeouts can trip
+            # them; without a deadline this filter is the identity
+            peers = [p for p in peers
+                     if self._breaker_admits(engine, region.rid, p.rid)]
+            if not peers:
+                # every peer's circuit is open: skip the peek entirely
+                self._origin(engine, st, q, t0)
+                return
         self.stats.peeks += 1
         self._inflight_peeks[region.rid] += 1
         q_emb = engine.world.embed(q)
         # one shared decision cell per broadcast: first positive response
-        # claims it; the last NAK triggers the origin fallback
+        # claims it; the last NAK triggers the origin fallback. "resolved"
+        # holds peers that already answered OR timed out, so a late
+        # response after its timeout NAK cannot double-resolve (§17)
         state = {"decided": False, "pending": len(peers),
-                 "src": region.rid}
+                 "src": region.rid, "resolved": set()}
         for peer in peers:
             rtt = self.rtt(region.rid, peer.rid)
+            if self.faults is not None:
+                rtt *= self.faults.link_mult(region.rid, peer.rid, t0)
             self.stats.probes += 1
             self.clock.push(
                 t0 + rtt / 2.0, self._probe,
                 engine, st, q, q_emb, t0, peer, rtt, state,
             )
+            if self.peek_timeout is not None:
+                self.clock.push(
+                    t0 + self.peek_timeout, self._peek_timeout,
+                    engine, st, q, t0, peer, state,
+                )
+
+    # ------------------------------------------------- circuit breaker
+
+    def _br(self, src: int, dst: int) -> dict:
+        key = (src, dst)
+        br = self._breaker.get(key)
+        if br is None:
+            br = {"state": "closed", "consec": 0, "opened_at": 0.0}
+            self._breaker[key] = br
+        return br
+
+    def _breaker_admits(self, engine, src: int, dst: int) -> bool:
+        """May src probe dst right now? Open circuits are skipped until
+        the cooldown elapses; then ONE half-open probe rides the next
+        broadcast and its outcome closes or re-opens the circuit."""
+        br = self._breaker.get((src, dst))
+        if br is None or br["state"] == "closed":
+            return True
+        if br["state"] == "open":
+            if self.clock.now - br["opened_at"] >= self.breaker_cooldown:
+                br["state"] = "half_open"
+                engine.trace.marker(BACKGROUND, "circuit_half_open",
+                                    self.clock.now, src, f"r{src}->r{dst}")
+                return True
+            self.stats.breaker_skips += 1
+            return False
+        # half_open: one probe is already in flight — don't pile on
+        self.stats.breaker_skips += 1
+        return False
+
+    def _peek_timeout(self, engine, st, q, t0, peer, state) -> None:
+        """The deadline fired before ``peer`` answered: treat it as that
+        peer's NAK, exactly once (a response that already arrived makes
+        this a no-op; a response arriving later finds itself resolved)."""
+        if state["decided"] or peer.rid in state["resolved"]:
+            return
+        state["resolved"].add(peer.rid)
+        self.stats.peek_timeouts += 1
+        br = self._br(state["src"], peer.rid)
+        br["consec"] += 1
+        if (br["state"] == "half_open"
+                or (br["state"] == "closed"
+                    and br["consec"] >= self.breaker_k)):
+            br["state"] = "open"
+            br["opened_at"] = self.clock.now
+            self.stats.breaker_opens += 1
+            engine.trace.marker(
+                BACKGROUND, "circuit_open", self.clock.now,
+                state["src"], f"r{state['src']}->r{peer.rid}",
+            )
+        state["pending"] -= 1
+        if state["pending"] == 0:
+            # the broadcast ends on the last timeout, same contract as
+            # the last NAK: decrement in-flight exactly once, fall back
+            self._inflight_peeks[state["src"]] -= 1
+            if engine.trace.enabled:
+                engine.trace.span(st.rec.rid, "peek_rtt", t0,
+                                  self.clock.now, engine.region_id,
+                                  "timeout")
+            self.stats.peer_misses += 1
+            self._origin(engine, st, q, t0)
 
     def _probe(self, engine, st, q, q_emb, t0, peer, rtt, state) -> None:
         """Probe arrives at the sibling: stage-1 peek against its cache
@@ -191,6 +290,12 @@ class Federation:
         the peek stays ANN-only — the legacy protocol exactly — while an
         armed band judges in-band candidates at the holder before they
         ship (peer-side judge time folds into the probe's half-RTT)."""
+        if (self.faults is not None
+                and self.faults.region_down(peer.rid, self.clock.now)):
+            # the peer is dark (§17): the probe lands on a region that
+            # answers nothing — no response event is ever pushed, and
+            # only an armed peek_timeout resolves this probe
+            return
         lease = None
         if not state["decided"]:  # decided = probe logically cancelled
             # a tiered peer consults BOTH tiers: warm entries are
@@ -215,8 +320,21 @@ class Federation:
         )
 
     def _response(self, engine, st, q, t0, peer, rtt, lease, state) -> None:
-        if state["decided"]:
+        if state["decided"] or peer.rid in state["resolved"]:
+            # broadcast already claimed, or this peer's timeout already
+            # NAKed it — a late response must not double-resolve (§17)
             return
+        state["resolved"].add(peer.rid)
+        br = self._breaker.get((state["src"], peer.rid))
+        if br is not None:
+            if br["state"] == "half_open":
+                br["state"] = "closed"
+                self.stats.breaker_closes += 1
+                engine.trace.marker(
+                    BACKGROUND, "circuit_close", self.clock.now,
+                    state["src"], f"r{state['src']}->r{peer.rid}",
+                )
+            br["consec"] = 0
         now = self.clock.now
         state["pending"] -= 1
         if lease is not None:
@@ -274,6 +392,11 @@ class Federation:
             latency_mult=engine.world.latency_mult(q),
             cost_mult=engine.world.cost_mult(q),
         )
+        if out.failed:
+            # origin brownout exhausted the retry budget (§17): hand the
+            # request to the engine's degraded-answer path
+            engine.fetch_failed(st, q, t0, out, t_start=self.clock.now)
+            return
         # starts at NOW (== t0 on the no-peering path, the last NAK's
         # arrival after a failed peek), ends when the fetch lands
         if engine.trace.enabled:
@@ -328,6 +451,13 @@ class FederationRunner:
                                                   # many virtual seconds
         slos=None,  # SLO objects / spec strings for the §16 monitor
                     # (requires sample_interval)
+        faults=None,  # FaultSchedule or spec strings (DESIGN.md §17)
+        peek_timeout: Optional[float] = None,  # §17 peek deadline
+        breaker_k: int = 3,
+        breaker_cooldown: float = 5.0,
+        overload: Optional[str] = None,  # None | "on" | "off" — arm a §17
+                                         # OverloadController per region
+        overload_cfg=None,  # OverloadConfig template (overrides on/off)
         seed: int = 0,
     ):
         if topology not in ("local", "peered", "global"):
@@ -342,6 +472,22 @@ class FederationRunner:
         self.clock = VirtualClock()
         footprint = int(world._sizes.sum())
         base_cfg = engine_cfg or EngineConfig()
+        if faults is not None and not hasattr(faults, "region_down"):
+            from repro.serving.faults import FaultSchedule
+
+            faults = FaultSchedule.parse(faults)
+        self.faults = faults
+
+        # §16 monitor first (engines' §17 controllers read its breach
+        # state); the sampler that FEEDS it is created after the engines
+        self.monitor = None
+        self.sampler = None
+        if slos and sample_interval is None:
+            raise ValueError("slos require sample_interval")
+        if sample_interval is not None and slos:
+            from repro.obs.slo import SLOMonitor
+
+            self.monitor = SLOMonitor(slos, tracer=tracer)
 
         # per-region router seeds: each region's cache clusters its OWN
         # rows (peek_semantic then routes peer probes through the same
@@ -421,6 +567,7 @@ class FederationRunner:
                 lat_lo=rc.wan_lat_lo, lat_hi=rc.wan_lat_hi,
                 cost_per_call=rc.wan_cost, qpm=rc.qpm,
                 seed=seed + 13 * (rid + 1),
+                faults=faults, region=rid,
             )
             gpu = GPU(gpu_cfg or GPUConfig())
             mgr = None
@@ -449,7 +596,10 @@ class FederationRunner:
             self.regions, self.clock, rtt=rtt,
             transfer_cost=transfer_cost, bandwidth=bandwidth,
             peering=(topology == "peered"),
+            peek_timeout=peek_timeout, faults=faults,
+            breaker_k=breaker_k, breaker_cooldown=breaker_cooldown,
         )
+        self.overload = overload
         for region, reqs in zip(self.regions, region_requests):
             cfg = dataclasses.replace(
                 base_cfg,
@@ -459,6 +609,21 @@ class FederationRunner:
                     if topology == "global" else 0.0
                 ),
             )
+            ctrl = None
+            if overload is not None:
+                from repro.serving.overload import (OverloadConfig,
+                                                    OverloadController)
+
+                cfg_o = (dataclasses.replace(overload_cfg)
+                         if overload_cfg is not None
+                         else OverloadConfig())
+                cfg_o.enabled = (overload == "on")
+                ctrl = OverloadController(
+                    cfg_o, monitor=self.monitor, tracer=tracer,
+                    region=region.rid,
+                )
+                if region.freshness is not None:
+                    region.freshness.overload = ctrl
             region.engine = Engine(
                 world=world,
                 requests=reqs,
@@ -472,22 +637,18 @@ class FederationRunner:
                 region_id=region.rid,
                 freshness=region.freshness,
                 tracer=tracer,
+                overload=ctrl,
+                faults=faults,
             )
 
         # §16 continuous telemetry: ONE sampler over the whole fleet
         # (shared clock), with the federation's queue-depth gauges and
-        # an optional SLO monitor riding the sample stream. Strictly
-        # observational — summaries stay byte-identical (gated).
-        self.monitor = None
-        self.sampler = None
-        if slos and sample_interval is None:
-            raise ValueError("slos require sample_interval")
+        # an optional SLO monitor (created above, before the engines,
+        # so §17 controllers can hold it) riding the sample stream.
+        # Strictly observational — summaries stay byte-identical (gated).
         if sample_interval is not None:
             from repro.obs.sampler import TimeSeriesSampler
-            from repro.obs.slo import SLOMonitor
 
-            if slos:
-                self.monitor = SLOMonitor(slos, tracer=tracer)
             self.sampler = TimeSeriesSampler(
                 self.clock, sample_interval, self.engines,
                 federation=self.federation, monitor=self.monitor,
@@ -606,6 +767,25 @@ class FederationRunner:
             if self.monitor is not None:
                 agg["slo_breaches"] = self.monitor.breaches
                 agg["slo_recoveries"] = self.monitor.recoveries
+        fed = self.federation
+        if fed.peek_timeout is not None or fed.faults is not None:
+            # §17 robustness keys, gated so fault-free pre-§17 summaries
+            # stay byte-identical; hung_peeks MUST be 0 after run()
+            agg["peek_timeouts"] = fs.peek_timeouts
+            agg["breaker_skips"] = fs.breaker_skips
+            agg["breaker_opens"] = fs.breaker_opens
+            agg["breaker_closes"] = fs.breaker_closes
+            agg["hung_peeks"] = int(sum(fed._inflight_peeks))
+            agg["fetch_failed"] = int(
+                sum(r.remote.failed for r in self.regions))
+        if self.overload is not None:
+            from repro.serving.overload import OverloadStats
+
+            tot = OverloadStats()
+            for e in self.engines:
+                for k, v in e.overload.metrics().items():
+                    setattr(tot, k, getattr(tot, k) + v)
+            agg["overload"] = dataclasses.asdict(tot)
         return {"aggregate": agg, "regions": per_region}
 
 

@@ -49,6 +49,7 @@ class FetchOutcome:
     cost: float
     retries: int
     throttled_wait: float
+    failed: bool = False   # terminal failure (brownout + retries exhausted)
 
 
 class RemoteDataService:
@@ -65,6 +66,8 @@ class RemoteDataService:
         backoff_mult: float = 2.0,
         max_retries: int = 8,
         seed: int = 0,
+        faults=None,
+        region: int = 0,
     ):
         self.lat_lo = lat_lo
         self.lat_hi = lat_hi
@@ -74,11 +77,20 @@ class RemoteDataService:
         self.backoff_mult = backoff_mult
         self.max_retries = max_retries
         self.rng = np.random.default_rng(seed)
+        # fault injection (DESIGN.md §17): brownout error/throttle draws
+        # come from a dedicated rng that is only advanced inside an
+        # active origin_brownout window, so the main latency stream —
+        # and therefore every fault-free run — is byte-identical.
+        self.faults = faults
+        self.region = region
+        self.fault_rng = np.random.default_rng(seed + 7919)
         # counters
         self.calls = 0
         self.attempts = 0
         self.retries = 0
+        self.failed = 0
         self.total_cost = 0.0
+        self.throttled_wait = 0.0
 
     def sample_latency(self) -> float:
         return float(self.rng.uniform(self.lat_lo, self.lat_hi))
@@ -93,16 +105,36 @@ class RemoteDataService:
         waited = 0.0
         while True:
             self.attempts += 1
-            if self.limiter is None or self.limiter.try_acquire(t):
-                lat = self.sample_latency() * latency_mult
-                cost = self.cost_per_call * cost_mult
-                self.calls += 1
-                self.total_cost += cost
-                return FetchOutcome(t + lat, cost, retries, waited)
-            # throttled
+            # origin brownout (DESIGN.md §17): the active window elevates
+            # per-attempt error and throttle rates; the dedicated fault
+            # rng is only drawn inside a window so fault-free runs keep
+            # every stream untouched.
+            bw = (self.faults.brownout(self.region, t)
+                  if self.faults is not None else None)
+            errored = (bw is not None and bw.error_rate > 0.0
+                       and float(self.fault_rng.random()) < bw.error_rate)
+            choked = (bw is not None and bw.throttle > 0.0
+                      and float(self.fault_rng.random()) < bw.throttle)
+            if not errored and not choked:
+                if self.limiter is None or self.limiter.try_acquire(t):
+                    lat = self.sample_latency() * latency_mult
+                    cost = self.cost_per_call * cost_mult
+                    self.calls += 1
+                    self.total_cost += cost
+                    self.throttled_wait += waited
+                    return FetchOutcome(t + lat, cost, retries, waited)
+            # throttled (or brownout error / spurious 429)
             retries += 1
             self.retries += 1
             if retries > self.max_retries:
+                if bw is not None:
+                    # retries exhausted inside a brownout: terminal
+                    # failure — the engine must answer through a
+                    # degraded path, not wait the window out here.
+                    self.failed += 1
+                    self.throttled_wait += waited
+                    return FetchOutcome(t, 0.0, retries, waited,
+                                        failed=True)
                 # final forced wait until a token is definitely available
                 wait = max(1.0 / self.limiter.rate, backoff)
             else:

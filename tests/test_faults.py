@@ -1,0 +1,156 @@
+"""Fault-injection tests (DESIGN.md §17): the FaultSchedule window
+algebra + spec grammar, origin-brownout terminal failure in the remote
+service, and the neutrality contract — an armed-but-inactive schedule
+must leave every stream byte-identical to a fault-free run."""
+import json
+
+import pytest
+
+from repro.launch.serve import run_once
+from repro.serving.faults import FaultSchedule, FaultWindow
+from repro.serving.remote import RemoteDataService
+
+
+def _canon(s):
+    return json.dumps(s, sort_keys=True, default=float)
+
+
+# ------------------------------------------------------- window algebra
+
+
+def test_windows_are_half_open_and_region_scoped():
+    sched = FaultSchedule([
+        FaultWindow("region_outage", 10.0, 20.0, region=1),
+    ])
+    assert sched.region_down(1, 10.0)          # closed at start
+    assert sched.region_down(1, 19.999)
+    assert not sched.region_down(1, 20.0)      # open at end
+    assert not sched.region_down(1, 9.999)
+    assert not sched.region_down(0, 15.0)      # other regions unaffected
+
+
+def test_region_none_hits_every_region():
+    sched = FaultSchedule([FaultWindow("region_outage", 0.0, 5.0)])
+    assert sched.region_down(0, 1.0) and sched.region_down(7, 1.0)
+
+
+def test_link_mult_composes_and_touches_either_endpoint():
+    sched = FaultSchedule([
+        FaultWindow("wan_degrade", 0.0, 10.0, region=1, mult=3.0),
+        FaultWindow("wan_degrade", 0.0, 10.0, mult=2.0),  # all links
+    ])
+    assert sched.link_mult(0, 1, 5.0) == pytest.approx(6.0)  # both apply
+    assert sched.link_mult(1, 2, 5.0) == pytest.approx(6.0)  # either end
+    assert sched.link_mult(0, 2, 5.0) == pytest.approx(2.0)  # global only
+    assert sched.link_mult(0, 1, 10.0) == 1.0                # expired
+
+
+def test_judge_mult_and_brownout_queries():
+    sched = FaultSchedule([
+        FaultWindow("judge_slowdown", 0.0, 5.0, region=2, mult=4.0),
+        FaultWindow("origin_brownout", 1.0, 3.0, error_rate=0.5,
+                    throttle=0.25),
+    ])
+    assert sched.judge_mult(2, 1.0) == pytest.approx(4.0)
+    assert sched.judge_mult(0, 1.0) == 1.0
+    bw = sched.brownout(0, 2.0)
+    assert bw is not None and bw.error_rate == 0.5 and bw.throttle == 0.25
+    assert sched.brownout(0, 3.0) is None
+
+
+# --------------------------------------------------------- spec grammar
+
+
+def test_parse_full_grammar():
+    sched = FaultSchedule.parse([
+        "region_outage:60:120:region=1",
+        "wan_degrade:30:90:region=1,mult=4",
+        "origin_brownout:20:80:error_rate=0.6,throttle=0.2",
+        "judge_slowdown:10:50:mult=3",
+    ])
+    assert len(sched) == 4
+    assert sched.region_down(1, 60.0) and not sched.region_down(0, 60.0)
+    assert sched.link_mult(1, 2, 40.0) == pytest.approx(4.0)
+    assert sched.brownout(0, 20.0).error_rate == pytest.approx(0.6)
+    assert sched.judge_mult(0, 10.0) == pytest.approx(3.0)
+
+
+def test_parse_rejects_bad_specs():
+    with pytest.raises(ValueError):
+        FaultSchedule.parse(["region_outage:60"])          # too few parts
+    with pytest.raises(ValueError):
+        FaultSchedule.parse(["meteor_strike:0:10"])        # unknown kind
+    with pytest.raises(ValueError):
+        FaultSchedule.parse(["wan_degrade:0:10:speed=3"])  # unknown key
+    with pytest.raises(ValueError):
+        FaultSchedule.parse(["wan_degrade:10:10"])         # empty window
+
+
+# -------------------------------------------- origin brownout (remote)
+
+
+def test_brownout_exhausts_retries_into_terminal_failure():
+    sched = FaultSchedule.parse(["origin_brownout:0:1e9:error_rate=1.0"])
+    svc = RemoteDataService(qpm=None, seed=0, faults=sched)
+    out = svc.fetch(0.0)
+    assert out.failed
+    assert out.retries == svc.max_retries + 1   # bounded, not forever
+    assert out.cost == 0.0                       # a failure is not billed
+    assert svc.failed == 1
+    assert svc.calls == 0
+    # the summary-facing counters moved even though the fetch failed
+    assert svc.throttled_wait == pytest.approx(out.throttled_wait)
+
+
+def test_fetch_outside_brownout_window_is_untouched():
+    sched = FaultSchedule.parse(["origin_brownout:50:60:error_rate=1.0"])
+    a = RemoteDataService(qpm=None, seed=0, faults=sched)
+    b = RemoteDataService(qpm=None, seed=0)
+    oa, ob = a.fetch(0.0), b.fetch(0.0)
+    assert not oa.failed
+    assert oa == ob   # same seed, window inactive -> identical outcome
+
+
+def test_armed_empty_schedule_is_stream_neutral():
+    """The §17 contract at the service level: an armed schedule that
+    never activates must not advance any rng the fault-free service
+    uses — every outcome stays bit-identical."""
+    a = RemoteDataService(qpm=50.0, seed=4, faults=FaultSchedule())
+    b = RemoteDataService(qpm=50.0, seed=4)
+    for i in range(40):
+        assert a.fetch(i * 0.1) == b.fetch(i * 0.1)
+    assert (a.calls, a.retries, a.total_cost) == \
+        (b.calls, b.retries, b.total_cost)
+
+
+# ------------------------------------------------- end-to-end neutrality
+
+
+def test_run_once_with_inactive_faults_matches_plain_summary():
+    kw = dict(n_requests=120, n_intents=100, dim=64, concurrency=4, seed=3)
+    plain = run_once(**kw)
+    armed = run_once(faults=["origin_brownout:1e8:2e8:error_rate=1.0"],
+                     **kw)
+    # the §17 keys surface only when a schedule is armed; the window
+    # never activates, so no fetch may fail and — those keys stripped —
+    # the whole summary must be byte-identical to the fault-free run
+    assert "fetch_failed" not in plain
+    assert armed.pop("fetch_failed") == 0
+    armed.pop("throttled_wait")
+    assert _canon(armed) == _canon(plain)
+
+
+def test_run_once_brownout_completes_with_degraded_paths():
+    """A hard 100 s brownout mid-run: every request must still complete
+    (bounded retries + §17 degraded answers), failures must be counted,
+    and with the controller ON some failures resolve from stale cache
+    entries instead of re-fetching."""
+    kw = dict(n_requests=300, n_intents=200, dim=64, churn_period=20.0,
+              qpm=None, faults=["origin_brownout:50:150:error_rate=1.0"],
+              seed=3)
+    on = run_once(overload="on", **kw)
+    off = run_once(overload="off", **kw)
+    assert on["n"] == off["n"] == 300
+    assert on["fetch_failed"] > 0 and off["fetch_failed"] > 0
+    assert on["overload"]["stale_served"] > 0      # §17 serve-stale
+    assert off["overload"]["stale_served"] == 0    # off-switch honoured

@@ -290,3 +290,132 @@ def test_region_workload_overlap_controls_sharing():
     b0, b1 = intent_sets(0.9)
     inter = len(b0 & b1) / min(len(b0), len(b1))
     assert inter > 0.5                           # heavy sharing at 0.9
+
+
+# ------------------------------------- peek timeouts + circuit breaker
+
+
+def _mk_timeout_federation(faults=None, peek_timeout=0.25, **kw):
+    from repro.serving.faults import FaultSchedule
+
+    if isinstance(faults, list):
+        faults = FaultSchedule.parse(faults)
+    return _mk_federation(rtt=0.08, peek_timeout=peek_timeout,
+                          faults=faults, **kw)
+
+
+def test_peek_timeout_naks_dark_peer_and_decrements_inflight_once():
+    fed, clock, regions, engines = _mk_timeout_federation(
+        faults=["region_outage:0:1000:region=1"])
+    q = WORLD.query(5, 0)
+    _seed_peer(regions[1], q)       # the peer HAS it, but answers nothing
+    fed.route(engines[0], st=None, q=q, t0=0.0)
+    assert fed._inflight_peeks[0] == 1
+    _drain(clock)
+
+    assert fed.stats.peek_timeouts == 1
+    assert fed.stats.peer_hits == 0
+    assert fed.stats.peer_misses == 1
+    assert fed.stats.origin_fetches == 1         # degraded, not wedged
+    assert fed._inflight_peeks == [0, 0]         # decremented exactly once
+    assert len(engines[0].results) == 1          # resolved exactly once
+
+
+def test_late_response_after_timeout_is_ignored():
+    # deadline (0.05) fires before the response (rtt 0.08): the peer's
+    # lease arrives late and must not double-resolve the broadcast
+    fed, clock, regions, engines = _mk_timeout_federation(
+        peek_timeout=0.05)
+    q = WORLD.query(5, 0)
+    _seed_peer(regions[1], q)
+    fed.route(engines[0], st=None, q=q, t0=0.0)
+    _drain(clock)
+
+    assert fed.stats.peek_timeouts == 1
+    assert fed.stats.peer_hits == 0              # the late lease is dead
+    assert fed.stats.transfers == 0
+    assert fed.stats.origin_fetches == 1
+    assert fed._inflight_peeks == [0, 0]
+    assert len(engines[0].results) == 1
+
+
+def test_response_before_timeout_keeps_legacy_path():
+    fed, clock, regions, engines = _mk_timeout_federation(
+        peek_timeout=5.0)
+    q = WORLD.query(5, 0)
+    _seed_peer(regions[1], q)
+    fed.route(engines[0], st=None, q=q, t0=0.0)
+    _drain(clock)
+
+    assert fed.stats.peek_timeouts == 0
+    assert fed.stats.peer_hits == 1
+    assert fed.stats.transfers == 1
+    assert fed._inflight_peeks == [0, 0]
+    assert len(engines[0].results) == 1
+
+
+def test_breaker_opens_after_k_timeouts_then_recloses_via_half_open():
+    fed, clock, regions, engines = _mk_timeout_federation(
+        faults=["region_outage:0:5:region=1"])
+    assert fed.breaker_k == 3
+
+    def one_round(q):
+        fed.route(engines[0], st=None, q=q, t0=clock.now)
+        _drain(clock)
+
+    # three consecutive timeouts open the r0->r1 circuit
+    for i in range(3):
+        one_round(WORLD.query(5 + i, 0))
+    br = fed._breaker[(0, 1)]
+    assert br["state"] == "open"
+    assert fed.stats.breaker_opens == 1
+    assert fed.stats.peek_timeouts == 3
+
+    # while open (cooldown not elapsed) peeks skip straight to origin
+    peeks_before = fed.stats.peeks
+    one_round(WORLD.query(8, 0))
+    assert fed.stats.peeks == peeks_before       # no broadcast at all
+    assert fed.stats.breaker_skips == 1
+
+    # cooldown elapses AND the outage window ends: the next broadcast
+    # rides one half-open probe, the response re-closes the circuit
+    clock.push(clock.now + fed.breaker_cooldown + 1.0, lambda now: None)
+    _drain(clock)
+    one_round(WORLD.query(9, 0))
+    assert br["state"] == "closed"
+    assert br["consec"] == 0
+    assert fed.stats.breaker_closes == 1
+    assert fed._inflight_peeks == [0, 0]
+
+
+def test_half_open_probe_timeout_reopens_immediately():
+    fed, clock, regions, engines = _mk_timeout_federation(
+        faults=["region_outage:0:1000:region=1"])
+
+    def one_round(q):
+        fed.route(engines[0], st=None, q=q, t0=clock.now)
+        _drain(clock)
+
+    for i in range(3):
+        one_round(WORLD.query(5 + i, 0))
+    br = fed._breaker[(0, 1)]
+    assert br["state"] == "open"
+
+    clock.push(clock.now + fed.breaker_cooldown + 1.0, lambda now: None)
+    _drain(clock)
+    one_round(WORLD.query(9, 0))                 # half-open probe times out
+    assert br["state"] == "open"                 # ONE failure re-opens
+    assert fed.stats.breaker_opens == 2
+    assert fed._inflight_peeks == [0, 0]
+
+
+def test_outage_runner_drains_with_zero_hung_peeks():
+    world = SemanticWorld(n_intents=60, dim=32, seed=3)
+    reqs = region_workloads(world, 30, 3, overlap=0.5, seed=4)
+    fr = FederationRunner(
+        world=world, region_requests=reqs, topology="peered",
+        faults=["region_outage:2:6:region=1"], peek_timeout=0.25, seed=0)
+    agg = fr.run()["aggregate"]
+    assert agg["n"] == sum(len(r) for r in reqs)
+    assert agg["hung_peeks"] == 0
+    assert agg["peek_timeouts"] > 0

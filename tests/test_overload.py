@@ -1,0 +1,190 @@
+"""Overload-control tests (DESIGN.md §17): the controller's decision
+functions in isolation, the armed-but-off neutrality contract end to
+end, shed-to-nojudge under a flash crowd, and the judge-timeout span
+discipline under sustained backlog (each timed-out request resolves
+exactly once, through exactly one span shape)."""
+import json
+
+import pytest
+
+from repro.launch.serve import run_once
+from repro.serving.overload import OverloadConfig, OverloadController
+
+
+def _canon(s):
+    return json.dumps(s, sort_keys=True, default=float)
+
+
+class _FakeMonitor:
+    """SLOMonitor stand-in: `active()` returns whatever the test set."""
+
+    def __init__(self, names=()):
+        self.names = set(names)
+
+    def active(self):
+        return set(self.names)
+
+
+# ------------------------------------------------- decision functions
+
+
+def test_shed_requires_pressure_and_similarity_margin():
+    ctrl = OverloadController(
+        OverloadConfig(judge_backlog_cap=4, shed_margin=0.02),
+        monitor=_FakeMonitor())
+    # no pressure: never shed
+    assert not ctrl.shed_judge(0.0, backlog=0, best_sim=0.99, tau=0.8)
+    # backlog pressure + similarity clear of tau+margin: shed
+    assert ctrl.shed_judge(1.0, backlog=4, best_sim=0.83, tau=0.8)
+    # backlog pressure but the candidate sits inside the margin: judge it
+    assert not ctrl.shed_judge(2.0, backlog=4, best_sim=0.81, tau=0.8)
+    assert ctrl.stats.shed_hits == 1
+    assert ctrl.stats.backlog_sheds == 1
+    assert ctrl.stats.slo_sheds == 0
+
+
+def test_shed_on_slo_breach_and_flip_accounting():
+    mon = _FakeMonitor()
+    ctrl = OverloadController(OverloadConfig(judge_backlog_cap=None),
+                              monitor=mon)
+    assert not ctrl.shed_judge(0.0, backlog=0, best_sim=1.0, tau=0.0)
+    mon.names = {"p99"}
+    assert ctrl.shed_judge(1.0, backlog=0, best_sim=1.0, tau=0.0)
+    assert ctrl.stats.slo_sheds == 1
+    mon.names = set()
+    assert not ctrl.shed_judge(2.0, backlog=0, best_sim=1.0, tau=0.0)
+    assert ctrl.stats.shed_flips == 2       # on at t=1, off at t=2
+
+
+def test_slo_name_filter_watches_one_slo():
+    mon = _FakeMonitor({"other"})
+    ctrl = OverloadController(OverloadConfig(slo_name="p99"), monitor=mon)
+    assert not ctrl.slo_breached()
+    mon.names = {"other", "p99"}
+    assert ctrl.slo_breached()
+
+
+def test_background_work_pauses_on_headroom_or_breach():
+    mon = _FakeMonitor()
+    ctrl = OverloadController(OverloadConfig(min_headroom=0.35),
+                              monitor=mon)
+    assert ctrl.allow_prefetch(0.5, 0.0)
+    assert not ctrl.allow_prefetch(0.2, 1.0)      # headroom floor
+    mon.names = {"p99"}
+    assert not ctrl.allow_refresh(0.9, 2.0)       # SLO breach
+    assert ctrl.stats.prefetch_paused == 1
+    assert ctrl.stats.refresh_paused == 1
+
+
+def test_every_policy_has_an_off_switch():
+    mon = _FakeMonitor({"p99"})
+    # master switch
+    off = OverloadController(OverloadConfig(enabled=False), monitor=mon)
+    assert not off.shed_judge(0.0, backlog=10 ** 6, best_sim=1.0, tau=0.0)
+    assert off.allow_prefetch(0.0, 0.0) and off.allow_refresh(0.0, 0.0)
+    assert not off.serve_stale_ok()
+    assert not any(off.metrics().values())
+    # per-policy switches with the master on
+    ctrl = OverloadController(
+        OverloadConfig(shed_on_slo=False, judge_backlog_cap=None,
+                       pause_prefetch=False, pause_refresh=False,
+                       serve_stale_on_failure=False),
+        monitor=mon)
+    assert not ctrl.shed_judge(0.0, backlog=10 ** 6, best_sim=1.0, tau=0.0)
+    assert ctrl.allow_prefetch(0.0, 0.0) and ctrl.allow_refresh(0.0, 0.0)
+    assert not ctrl.serve_stale_ok()
+
+
+# --------------------------------------------------- end-to-end: off
+
+
+def test_armed_off_run_is_byte_neutral():
+    kw = dict(n_requests=120, n_intents=100, dim=64, concurrency=4, seed=3)
+    plain = run_once(**kw)
+    off = run_once(overload="off", **kw)
+    assert not any(off["overload"].values())
+    assert "overload" not in plain
+    off.pop("overload")
+    assert _canon(off) == _canon(plain)
+
+
+def test_run_once_rejects_unknown_overload_mode():
+    with pytest.raises(ValueError):
+        run_once(n_requests=10, overload="sideways")
+
+
+# ---------------------------------------------- end-to-end: flash crowd
+
+
+def test_flash_crowd_sheds_and_recovers_latency():
+    kw = dict(workload="trend", n_requests=200, n_intents=150, dim=64,
+              qpm=400.0, trend_duration=8.0, seed=9,
+              sample_interval=5.0, slo=["p99:window.latency_p99:<=:5.0"])
+    off = run_once(overload="off", **kw)
+    on = run_once(overload="on", **kw)
+    assert on["overload"]["shed_hits"] > 0
+    assert on["overload"]["backlog_sheds"] > 0
+    assert on["latency_p99"] < off["latency_p99"]
+    assert on["hit_rate"] >= off["hit_rate"]
+    # sheds only widen the trust edge: quality survives
+    assert on["info_accuracy"] >= 0.98
+
+
+# ------------------------------- judge timeout under sustained backlog
+
+
+def _judge_spans(path):
+    rows = [json.loads(line) for line in open(path)]
+    by_rid = {}
+    for r in rows:
+        by_rid.setdefault(r["rid"], []).append(r)
+    return rows, by_rid
+
+
+def test_judge_timeout_spans_under_sustained_backlog(tmp_path):
+    """Flash crowd + tight judge deadline: most judge jobs time out
+    while still QUEUED (one `judge_queue_wait` span tagged "timeout"),
+    a few after DISPATCH (an untagged queue-wait ending exactly where a
+    "timeout"-tagged `judge_compute` begins).  Every timed-out request
+    must proceed as a miss at the timeout instant — and only once: the
+    conservation checker inside run_once would flag any double-resolve
+    as overlapping spans."""
+    out = run_once(workload="trend", n_requests=200, n_intents=150,
+                   dim=64, qpm=400.0, trend_duration=10.0,
+                   judge_timeout=0.05, seed=9,
+                   trace=str(tmp_path / "t"))
+    assert out["trace_conservation_violations"] == 0
+    rows, by_rid = _judge_spans(str(tmp_path / "t.jsonl"))
+
+    queued = [r for r in rows if r["name"] == "judge_queue_wait"
+              and r.get("tag") == "timeout"]
+    computed = [r for r in rows if r["name"] == "judge_compute"
+                and r.get("tag") == "timeout"]
+    assert queued, "no queued-timeout spans — deadline never bit"
+    assert computed, "no dispatched-timeout spans — backlog never " \
+                     "reached the accelerator before the deadline"
+
+    for span in computed:
+        # shape 2: an untagged queue-wait hands off exactly at dispatch
+        waits = [r for r in by_rid[span["rid"]]
+                 if r["name"] == "judge_queue_wait"
+                 and r.get("tag") is None and r["t1"] == span["t0"]]
+        assert waits, f"rid {span['rid']}: dispatched timeout without " \
+                      "its queue-wait span"
+
+    for span in queued + computed:
+        # the request proceeds as a miss AT the timeout instant — the
+        # origin fetch span opens where the judge span closed
+        follows = [r for r in by_rid[span["rid"]]
+                   if r["name"] == "origin_fetch" and r["t0"] == span["t1"]]
+        assert follows, f"rid {span['rid']}: timed out at {span['t1']} " \
+                        "but no origin fetch starts there"
+
+    for rid, spans in by_rid.items():
+        tagged = [r for r in spans if r.get("tag") == "timeout"
+                  and r["name"].startswith("judge_")]
+        # a request judges once per round: its timeout-tagged judge
+        # spans must never overlap (double-resolution)
+        tagged.sort(key=lambda r: r["t0"])
+        for a, b in zip(tagged, tagged[1:]):
+            assert a["t1"] <= b["t0"]
